@@ -1,0 +1,43 @@
+"""Figs 25/26 reproduction: dynamic DNN inference (InstaNAS-like I-NAS,
+Dynamic Routing DR, CondConv CC). Per-input graphs: the DAG baseline pays
+construction per image; ACS does not. Real wall-clock + modeled policies
++ occupancy."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import TaskStream, WaveScheduler, run_serial
+from repro.dyn import WORKLOADS
+
+from .common import emit, modeled_policies, speedup_table, wall
+
+NETS = {"instanas": "I-NAS", "dynamic_routing": "DR", "condconv": "CC"}
+
+
+def build_tasks(name: str, input_seed: int, params=None):
+    init_fn, build_fn, _ = WORKLOADS[name]
+    params = params if params is not None else init_fn(0)
+    rng = np.random.RandomState(input_seed)
+    x = rng.randn(1, 3, 32, 32).astype(np.float32) * (1.0 + 0.3 * input_seed)
+    stream = TaskStream()
+    build_fn(params, stream, x)
+    return stream.tasks
+
+
+def main() -> None:
+    for name, tag in NETS.items():
+        sched = WaveScheduler(window_size=32)
+        sched.run(build_tasks(name, 0))   # warm compile caches
+        run_serial(build_tasks(name, 0))
+
+        t_acs = wall(lambda: sched.run(build_tasks(name, 1)), repeats=2)
+        t_ser = wall(lambda: run_serial(build_tasks(name, 1)), repeats=2)
+        emit("fig25_dyn_real", f"{tag}_acs_sw_speedup", round(t_ser / t_acs, 3))
+
+        tasks = build_tasks(name, 2)
+        speedup_table(f"fig25_dyn_model_{tag}", modeled_policies(tasks))
+
+
+if __name__ == "__main__":
+    main()

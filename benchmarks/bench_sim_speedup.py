@@ -1,0 +1,48 @@
+"""Figs 21/22 reproduction: deep-RL physics simulation speedups for the 5
+paper environments. Reports (a) REAL wall-clock on this host — serial
+per-kernel dispatch vs ACS-SW wave dispatch (the dispatch-overhead
+amortization that is the software half of the paper's win), and (b) the
+MODELED policy comparison on RTX3060-class constants (serial / ACS-SW /
+ACS-HW / CUDAGraph-with-construction), which is where the paper's
+2.19x-max numbers live."""
+
+from __future__ import annotations
+
+from repro.core import TaskStream, WaveScheduler, run_serial
+from repro.sim import ENVIRONMENTS, PhysicsEngine
+
+from .common import emit, modeled_policies, paper_scale_sim_tasks, speedup_table, wall
+
+ENVS = ("ant", "grasp", "humanoid", "cheetah", "walker2d")
+STEPS = 3
+N_ENVS, GROUP = 16, 4
+
+
+def build_tasks(env: str, seed: int):
+    eng = PhysicsEngine(ENVIRONMENTS[env], n_envs=N_ENVS, group_size=GROUP,
+                        seed=seed)
+    stream = TaskStream()
+    eng.emit_batch(stream, STEPS)
+    return stream.tasks
+
+
+def main() -> None:
+    for env in ENVS:
+        # -- real wall clock (compile-warmed: same wave signatures recur) ---
+        sched = WaveScheduler(window_size=32)
+        warm = build_tasks(env, seed=0)
+        sched.run(warm)                       # warm the wave cache
+        serial_warm = build_tasks(env, seed=0)
+        run_serial(serial_warm)
+
+        t_acs = wall(lambda: sched.run(build_tasks(env, seed=1)), repeats=2)
+        t_ser = wall(lambda: run_serial(build_tasks(env, seed=1)), repeats=2)
+        emit("fig21_sim_real", f"{env}_acs_sw_speedup", round(t_ser / t_acs, 3))
+
+        # -- modeled policies (fig 22, paper-scale stream) -------------------
+        tasks = paper_scale_sim_tasks(env, seed=2)
+        speedup_table(f"fig22_sim_model_{env}", modeled_policies(tasks))
+
+
+if __name__ == "__main__":
+    main()

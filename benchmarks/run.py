@@ -1,0 +1,47 @@
+"""Benchmark runner: one section per paper table/figure (DESIGN.md §8).
+Prints ``name,metric,value`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (
+    bench_dag_overhead,
+    bench_depcheck,
+    bench_dynamic_dnn,
+    bench_moe_waves,
+    bench_occupancy,
+    bench_rl_e2e,
+    bench_sim_speedup,
+    bench_static_dnn,
+    bench_window_size,
+)
+
+SECTIONS = {
+    "depcheck": bench_depcheck,          # Table II
+    "dag_overhead": bench_dag_overhead,  # Fig 9
+    "sim_speedup": bench_sim_speedup,    # Figs 21/22
+    "rl_e2e": bench_rl_e2e,              # Fig 23
+    "occupancy": bench_occupancy,        # Figs 2/24
+    "dynamic_dnn": bench_dynamic_dnn,    # Figs 25/26
+    "static_dnn": bench_static_dnn,      # Figs 27/28
+    "window_size": bench_window_size,    # Fig 29
+    "moe_waves": bench_moe_waves,        # beyond-paper (DESIGN §4)
+}
+
+
+def main() -> None:
+    chosen = sys.argv[1:] or list(SECTIONS)
+    print("section,metric,value")
+    for name in chosen:
+        mod = SECTIONS[name]
+        t0 = time.time()
+        mod.main()
+        print(f"_timing,{name}_seconds,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

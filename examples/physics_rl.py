@@ -1,0 +1,50 @@
+"""End-to-end deep-RL data generation through ACS (the paper's headline
+workload): run Brax-style physics environments with a linear policy,
+collecting a batch of (obs, action, reward-proxy) trajectories — the
+simulation stream scheduled by the ACS window, exactly as §VI-A.
+
+    PYTHONPATH=src python examples/physics_rl.py [env] [steps]
+"""
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import TaskStream, WaveScheduler
+from repro.sim import PhysicsEngine, make_env
+
+
+def main():
+    env = sys.argv[1] if len(sys.argv) > 1 else "cheetah"
+    steps = int(sys.argv[2]) if len(sys.argv) > 2 else 5
+
+    eng = PhysicsEngine(make_env(env), n_envs=16, group_size=4, seed=0)
+    sched = WaveScheduler(window_size=32)
+    rng = np.random.RandomState(0)
+
+    obs_dim = eng.spec.n_bodies * 6
+    w_policy = rng.randn(obs_dim, eng.spec.n_joints).astype(np.float32) * 0.1
+
+    def policy(obs):  # linear policy over engine observations
+        return np.tanh(obs @ w_policy)
+
+    trajectory = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        stream = TaskStream()
+        eng.emit_step(stream, policy=policy)
+        report = sched.run(stream.tasks)
+        snap = eng.state_snapshot()
+        reward = -np.linalg.norm(snap[..., :3], axis=-1).mean()  # stay near origin
+        trajectory.append(reward)
+        print(f"step {step}: kernels={len(stream.tasks)} "
+              f"dispatches={report.exec_stats['dispatches']} "
+              f"wave_width={report.mean_wave_width:.1f} reward={reward:.3f}")
+    dt = time.perf_counter() - t0
+    print(f"\n{env}: {steps} steps, {dt:.2f}s wall, "
+          f"states finite: {bool(np.all(np.isfinite(eng.state_snapshot())))}")
+
+
+if __name__ == "__main__":
+    main()

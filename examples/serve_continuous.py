@@ -1,0 +1,53 @@
+"""Serving driver: continuous batching through the ACS window (DESIGN §4).
+Requests arrive over time; each owns a KV-cache slot; the ACS dependency
+window automatically co-schedules new prefills with the in-flight decode
+wave (disjoint slots => same wave), while each request's own prefill ->
+decode chain stays serialized by its RAW hazards.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.runtime import ContinuousBatchingServer
+
+
+def main():
+    cfg = dataclasses.replace(
+        ARCHS["h2o-danube-3-4b"].reduced(),
+        n_layers=2, d_model=64, d_ff=128, vocab=512,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0), tp_size=1)
+    server = ContinuousBatchingServer(cfg, params, max_slots=3, max_len=48)
+    rng = np.random.RandomState(0)
+
+    # staggered arrivals: a new request shows up every other iteration
+    arrivals = {0: 2, 2: 1, 4: 2, 6: 1}
+    finished = []
+    for it in range(40):
+        for _ in range(arrivals.get(it, 0)):
+            req = server.submit(rng.randint(0, cfg.vocab, rng.randint(4, 9)),
+                                max_new=6)
+            print(f"[iter {it}] submitted request {req.rid}")
+        done = server.step()
+        for r in done:
+            finished.append(r)
+            print(f"[iter {it}] finished request {r.rid}: tokens {r.generated}")
+        if not server.queue and not server.active and it > 8:
+            break
+
+    waves = [e for e in server.report_log]
+    multi = sum(1 for e in waves if e.get("tasks_this_run", 0) > 1
+                and e.get("waves_this_run", 0) < e.get("tasks_this_run", 0))
+    print(f"\nserved {len(finished)} requests in {len(waves)} iterations; "
+          f"{multi} iterations co-scheduled independent work in one wave")
+
+
+if __name__ == "__main__":
+    main()

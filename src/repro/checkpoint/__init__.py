@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: sharded save/restore + elastic remesh."""
+
+from .manager import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree"]

@@ -1,0 +1,137 @@
+"""Sharded checkpointing with atomic manifests and elastic restore.
+
+Layout (one directory per step)::
+
+    ckpt_dir/
+      step_000123/
+        manifest.json        # tree structure, dtypes, shapes, data cursor
+        arrays/<leaf>.npy    # one file per pytree leaf
+      LATEST                 # atomically updated pointer
+
+Fault-tolerance properties:
+* **Atomicity** — a step directory is written under ``.tmp`` and renamed;
+  ``LATEST`` is only updated after the rename, so a crash mid-save leaves
+  the previous checkpoint intact.
+* **Restart** — ``manager.restore_latest()`` returns (tree, extras) or
+  None; the trainer resumes from (params, opt_state, data cursor).
+* **Elastic remesh** — arrays are saved UNSHARDED (gathered); on restore
+  the trainer re-applies whatever sharding the *new* mesh prescribes, so
+  restarting on a different topology (e.g. 256 -> 512 chips) needs no
+  conversion step. At real scale the np.save writer is replaced by a
+  tensorstore/OCDBT driver behind the same manifest contract.
+* **Retention** — ``keep`` most recent steps are retained, older ones
+  garbage-collected after a successful save.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_tree", "restore_tree", "CheckpointManager"]
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _ in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        names.append("/".join(parts) or "root")
+    return [(n, v) for n, (_, v) in zip(names, flat)], treedef
+
+
+def save_tree(tree: Any, directory: Path, extras: Optional[Dict] = None) -> None:
+    directory = Path(directory)
+    tmp = directory.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    (tmp / "arrays").mkdir(parents=True)
+    leaves, _ = _flatten_with_names(tree)
+    manifest = {"leaves": [], "extras": extras or {}, "time": time.time()}
+    for i, (name, val) in enumerate(leaves):
+        arr = np.asarray(val)
+        fname = f"{i:05d}.npy"
+        np.save(tmp / "arrays" / fname, arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if directory.exists():
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def restore_tree(tree_like: Any, directory: Path) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes must match;
+    dtypes are cast — bf16 params round-trip through fp32 files)."""
+    directory = Path(directory)
+    manifest = json.loads((directory / "manifest.json").read_text())
+    leaves, treedef = _flatten_with_names(tree_like)
+    if len(leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"target tree has {len(leaves)}"
+        )
+    vals = []
+    for (name, like), meta in zip(leaves, manifest["leaves"]):
+        if list(np.shape(like)) != meta["shape"]:
+            raise ValueError(
+                f"leaf {name}: checkpoint shape {meta['shape']} != {np.shape(like)}"
+            )
+        arr = np.load(directory / "arrays" / meta["file"])
+        vals.append(arr.astype(np.asarray(like).dtype if hasattr(like, "dtype") else arr.dtype))
+    restored = jax.tree_util.tree_unflatten(treedef, vals)
+    return restored, manifest["extras"]
+
+
+class CheckpointManager:
+    def __init__(self, root: Path, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    def save(self, step: int, tree: Any, extras: Optional[Dict] = None) -> None:
+        save_tree(tree, self._step_dir(step), extras={**(extras or {}), "step": step})
+        (self.root / "LATEST.tmp").write_text(str(step))
+        os.replace(self.root / "LATEST.tmp", self.root / "LATEST")
+        self._gc()
+
+    def latest_step(self) -> Optional[int]:
+        p = self.root / "LATEST"
+        if not p.exists():
+            return None
+        return int(p.read_text().strip())
+
+    def restore_latest(self, tree_like: Any) -> Optional[Tuple[Any, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return restore_tree(tree_like, self._step_dir(step))
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.root.glob("step_*")
+            if p.is_dir()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

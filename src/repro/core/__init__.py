@@ -1,0 +1,61 @@
+"""repro.core — ACS: windowed out-of-order kernel scheduling (the paper's
+contribution), adapted to TPU/JAX. See DESIGN.md §2 for the mapping."""
+
+from .buffers import Buffer, BufferPool, BufferView
+from .dag_baseline import DagRunner, build_full_dag, level_schedule
+from .device_dispatch import DeviceOpRegistry, DeviceWindowRunner, plan_waves
+from .executors import FusedWaveExecutor, SerialExecutor
+from .perfmodel import (
+    DeviceModel,
+    RTX3060_LIKE,
+    RTX3070_LIKE,
+    TPU_V5E_CORE,
+    simulate,
+)
+from .scheduler import (
+    SchedulerReport,
+    ThreadedStreamScheduler,
+    WaveScheduler,
+    run_serial,
+)
+from .segments import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
+from .task import Task, operand_dtype, operand_shape
+from .window import SchedulingWindow, TaskState
+from .wrapper import KERNEL_REGISTRY, AcsKernel, TaskStream, acs_kernel
+
+__all__ = [
+    "Buffer",
+    "BufferPool",
+    "BufferView",
+    "DagRunner",
+    "build_full_dag",
+    "level_schedule",
+    "DeviceOpRegistry",
+    "DeviceWindowRunner",
+    "plan_waves",
+    "FusedWaveExecutor",
+    "SerialExecutor",
+    "DeviceModel",
+    "RTX3060_LIKE",
+    "RTX3070_LIKE",
+    "TPU_V5E_CORE",
+    "simulate",
+    "SchedulerReport",
+    "ThreadedStreamScheduler",
+    "WaveScheduler",
+    "run_serial",
+    "Segment",
+    "SegmentSet",
+    "any_overlap",
+    "depends_on",
+    "segments_overlap",
+    "Task",
+    "operand_dtype",
+    "operand_shape",
+    "SchedulingWindow",
+    "TaskState",
+    "KERNEL_REGISTRY",
+    "AcsKernel",
+    "TaskStream",
+    "acs_kernel",
+]

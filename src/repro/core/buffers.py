@@ -1,0 +1,157 @@
+"""Virtual device address space + buffer pool.
+
+The paper's dependency checks operate on *virtual addresses* resolved just
+before kernel launch (§IV-A). JAX arrays do not expose stable device
+addresses, so the runtime maintains its own virtual address space: every
+logical buffer is assigned a contiguous address range at allocation time,
+and kernel wrappers resolve (buffer, offset, size) references into absolute
+``Segment``s — exactly the role of ``get_addresses`` in Fig 17.
+
+This indirection is *faithful*, not cosmetic: sub-buffer views (e.g. one
+request's KV-cache rows, one body's state slice in the physics engine)
+map to sub-intervals of the parent buffer's range, so partial-overlap
+dependencies behave like real address-range checks, including aliasing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from .segments import Segment
+
+__all__ = ["Buffer", "BufferView", "BufferPool"]
+
+_ALIGN = 256  # bytes; mirrors typical device allocator alignment.
+
+
+@dataclasses.dataclass
+class Buffer:
+    """A logical device allocation with a virtual address range."""
+
+    name: str
+    base: int
+    nbytes: int
+    shape: Tuple[int, ...]
+    dtype: Any
+    # Host-side value (a jax array / numpy array). The ACS executors
+    # functionally update this as tasks retire.
+    value: Any = None
+
+    @property
+    def segment(self) -> Segment:
+        return Segment(self.base, self.nbytes)
+
+    def view(self, offset_bytes: int, nbytes: int) -> "BufferView":
+        if offset_bytes < 0 or offset_bytes + nbytes > self.nbytes:
+            raise ValueError(
+                f"view [{offset_bytes}, {offset_bytes + nbytes}) out of bounds "
+                f"for buffer {self.name!r} of {self.nbytes} bytes"
+            )
+        return BufferView(self, offset_bytes, nbytes)
+
+    def row_view(self, row_start: int, row_count: int) -> "BufferView":
+        """View of contiguous leading-axis rows — the common case
+        (a request's KV rows, a token group's slice, a body's state)."""
+        if not self.shape:
+            raise ValueError("row_view requires a shaped buffer")
+        row_bytes = self.nbytes // self.shape[0]
+        v = self.view(row_start * row_bytes, row_count * row_bytes)
+        return BufferView(self, v.offset, v.nbytes, row_start, row_count)
+
+    # Value plumbing (executors read/write through these) -----------------
+    def get_value(self):
+        return self.value
+
+    def set_value(self, new) -> None:
+        self.value = new
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferView:
+    """A (buffer, offset, size) reference — resolvable to a Segment.
+
+    ``row_start``/``row_count`` are set when the view is a contiguous
+    leading-axis row slice; executors use them to slice / scatter values.
+    """
+
+    buffer: Buffer
+    offset: int
+    nbytes: int
+    row_start: Optional[int] = None
+    row_count: Optional[int] = None
+
+    @property
+    def segment(self) -> Segment:
+        return Segment(self.buffer.base + self.offset, self.nbytes)
+
+    @property
+    def name(self) -> str:
+        return f"{self.buffer.name}[{self.offset}:{self.offset + self.nbytes}]"
+
+    def get_value(self):
+        if self.row_start is not None:
+            return self.buffer.value[self.row_start : self.row_start + self.row_count]
+        raise ValueError("only row views carry values; use the parent buffer")
+
+    def set_value(self, new) -> None:
+        if self.row_start is None:
+            raise ValueError("only row views support value writeback")
+        val = self.buffer.value
+        if hasattr(val, "at"):  # jax array
+            self.buffer.value = val.at[self.row_start : self.row_start + self.row_count].set(new)
+        else:  # numpy
+            val[self.row_start : self.row_start + self.row_count] = new
+
+
+class BufferPool:
+    """Bump allocator over the virtual address space (thread-safe).
+
+    Addresses are never recycled during a stream's lifetime: the paper's
+    window only ever holds a handful of live kernels, and monotonically
+    increasing addresses make WAR/WAW detection exact without a free-list.
+    """
+
+    def __init__(self) -> None:
+        self._next = _ALIGN  # keep 0 unused; eases debugging.
+        self._buffers: Dict[str, Buffer] = {}
+        self._lock = threading.Lock()
+        self._anon = 0
+
+    def alloc(
+        self,
+        shape: Tuple[int, ...],
+        dtype: Any = np.float32,
+        name: Optional[str] = None,
+        value: Any = None,
+    ) -> Buffer:
+        nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize if shape else np.dtype(dtype).itemsize
+        nbytes = max(nbytes, 1)
+        with self._lock:
+            if name is None:
+                name = f"buf{self._anon}"
+                self._anon += 1
+            if name in self._buffers:
+                raise KeyError(f"buffer {name!r} already allocated")
+            base = self._next
+            padded = (nbytes + _ALIGN - 1) // _ALIGN * _ALIGN
+            self._next = base + padded
+            buf = Buffer(name=name, base=base, nbytes=nbytes, shape=tuple(shape), dtype=np.dtype(dtype), value=value)
+            self._buffers[name] = buf
+            return buf
+
+    def from_array(self, arr: Any, name: Optional[str] = None) -> Buffer:
+        arr_np_dtype = np.dtype(str(arr.dtype)) if hasattr(arr, "dtype") else np.dtype(np.float32)
+        return self.alloc(tuple(arr.shape), arr_np_dtype, name=name, value=arr)
+
+    def __getitem__(self, name: str) -> Buffer:
+        return self._buffers[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._buffers
+
+    def __len__(self) -> int:
+        return len(self._buffers)

@@ -1,0 +1,165 @@
+"""Wave executors — how a set of READY kernels actually runs on the device.
+
+On a GPU, ACS launches ready kernels into parallel streams. A TPU core runs
+one program at a time, so "concurrent execution" is realized by *fusing the
+ready set into one launch* (DESIGN.md §2, assumption A1):
+
+* :class:`SerialExecutor` — one device dispatch per task, in program order.
+  This is the paper's single-stream baseline.
+* :class:`FusedWaveExecutor` — the ACS-SW analogue. A wave (the ready set)
+  is partitioned into homogeneous groups (equal ``Task.signature``); each
+  group becomes ONE vmapped call (N small kernels -> 1 batched kernel) and
+  the groups are emitted into a single jitted wave program that XLA
+  schedules as one launch. Compiled wave programs are cached by the wave's
+  signature multiset — the "CUDA-Graph-without-reconstruction" property:
+  different inputs produce different graphs, but recurring wave *shapes*
+  reuse compiled artifacts (A2).
+
+Dispatch counts are recorded: they are the TPU-side analogue of the kernel
+launch + synchronization overheads of §II-D.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .task import Task
+
+__all__ = ["ExecStats", "SerialExecutor", "FusedWaveExecutor"]
+
+
+class ExecStats:
+    def __init__(self) -> None:
+        self.dispatches = 0
+        self.compiles = 0
+        self.tasks_run = 0
+        self.wave_widths: List[int] = []
+        self.exec_seconds = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        w = np.asarray(self.wave_widths or [0])
+        return {
+            "dispatches": self.dispatches,
+            "compiles": self.compiles,
+            "tasks_run": self.tasks_run,
+            "waves": len(self.wave_widths),
+            "mean_wave_width": float(w.mean()),
+            "max_wave_width": int(w.max()),
+            "exec_seconds": self.exec_seconds,
+        }
+
+
+class SerialExecutor:
+    """Single-stream baseline: every kernel is its own dispatch."""
+
+    def __init__(self) -> None:
+        self.stats = ExecStats()
+        self._jit_cache: Dict[Tuple, Callable] = {}
+
+    def execute_wave(self, tasks: Sequence[Task]) -> None:
+        t0 = time.perf_counter()
+        for task in tasks:
+            fn = self._jit_cache.get(task.signature)
+            if fn is None:
+                fn = jax.jit(task.fn)
+                self._jit_cache[task.signature] = fn
+                self.stats.compiles += 1
+            out = fn(*task.input_values())
+            task.write_outputs(out)
+            self.stats.dispatches += 1
+            self.stats.tasks_run += 1
+            self.stats.wave_widths.append(1)
+        self.stats.exec_seconds += time.perf_counter() - t0
+
+    def finalize(self) -> None:
+        jax.block_until_ready(jax.numpy.zeros(()))
+
+
+def _group_by_signature(tasks: Sequence[Task]) -> List[List[Task]]:
+    groups: Dict[Tuple, List[Task]] = {}
+    order: List[Tuple] = []
+    for t in tasks:
+        key = t.signature
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(t)
+    return [groups[k] for k in order]
+
+
+class FusedWaveExecutor:
+    """ACS-SW on TPU: the ready set becomes one fused, batched launch."""
+
+    def __init__(self) -> None:
+        self.stats = ExecStats()
+        self._wave_cache: Dict[Tuple, Callable] = {}
+
+    # wave signature = ordered multiset of task signatures
+    @staticmethod
+    def _wave_key(groups: List[List[Task]]) -> Tuple:
+        return tuple((g[0].signature, len(g)) for g in groups)
+
+    @staticmethod
+    def _build_wave_fn(groups: List[List[Task]]) -> Callable:
+        metas = []
+        for g in groups:
+            metas.append((g[0].fn, len(g) > 1))
+
+        def wave_fn(group_inputs):
+            outs = []
+            for (fn, batched), ins in zip(metas, group_inputs):
+                if batched:
+                    outs.append(jax.vmap(fn)(*ins))
+                else:
+                    outs.append(fn(*ins))
+            return outs
+
+        return jax.jit(wave_fn)
+
+    def execute_wave(self, tasks: Sequence[Task]) -> None:
+        if not tasks:
+            return
+        t0 = time.perf_counter()
+        groups = _group_by_signature(tasks)
+        key = self._wave_key(groups)
+        wave_fn = self._wave_cache.get(key)
+        if wave_fn is None:
+            wave_fn = self._build_wave_fn(groups)
+            self._wave_cache[key] = wave_fn
+            self.stats.compiles += 1
+
+        group_inputs = []
+        for g in groups:
+            if len(g) > 1:
+                n_in = len(g[0].inputs)
+                stacked = tuple(
+                    jax.numpy.stack([t.input_values()[i] for t in g]) for i in range(n_in)
+                )
+                group_inputs.append(stacked)
+            else:
+                group_inputs.append(g[0].input_values())
+
+        group_outputs = wave_fn(group_inputs)
+        self.stats.dispatches += 1
+        self.stats.tasks_run += len(tasks)
+        self.stats.wave_widths.append(len(tasks))
+
+        for g, outs in zip(groups, group_outputs):
+            if len(g) > 1:
+                # outs: stacked along axis 0 (single-output) or tuple thereof
+                if isinstance(outs, (tuple, list)):
+                    for i, t in enumerate(g):
+                        t.write_outputs(tuple(o[i] for o in outs))
+                else:
+                    for i, t in enumerate(g):
+                        t.write_outputs(outs[i])
+            else:
+                g[0].write_outputs(outs)
+        self.stats.exec_seconds += time.perf_counter() - t0
+
+    def finalize(self) -> None:
+        jax.block_until_ready(jax.numpy.zeros(()))

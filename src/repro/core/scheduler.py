@@ -1,0 +1,156 @@
+"""ACS-SW schedulers: window -> waves -> executor.
+
+:class:`WaveScheduler` is the TPU-adapted ACS-SW runtime (wave-synchronous:
+all READY kernels launch as one fused wave, retire together, refill). It is
+deterministic, which the equivalence tests rely on.
+
+:class:`ThreadedStreamScheduler` is the *mechanically faithful* ACS-SW of
+paper §IV-B: a window module plus K scheduler threads, each emulating one
+CUDA stream — poll window for a READY kernel under a lock, launch, block
+until complete (the ``StreamSync`` of Algorithm 2), retire, repeat. It
+exists to reproduce the paper's software architecture and its overhead
+profile (per-kernel dispatch + sync from host threads); the wave scheduler
+is the performance path on TPU.
+
+Both produce identical final buffer contents as the serial baseline
+(property-tested): ACS only reorders provably independent kernels.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import jax
+
+from .executors import ExecStats, FusedWaveExecutor, SerialExecutor
+from .task import Task
+from .window import SchedulingWindow
+from .wrapper import TaskStream
+
+__all__ = ["SchedulerReport", "WaveScheduler", "ThreadedStreamScheduler", "run_serial"]
+
+
+class SchedulerReport:
+    def __init__(self, window: SchedulingWindow, exec_stats: ExecStats, wall_seconds: float, waves: List[List[int]]):
+        self.window_stats = window.stats.as_dict()
+        self.exec_stats = exec_stats.as_dict()
+        self.wall_seconds = wall_seconds
+        self.waves = waves  # list of lists of tids (schedule trace)
+
+    @property
+    def mean_wave_width(self) -> float:
+        return self.exec_stats["mean_wave_width"]
+
+    def occupancy_proxy(self, max_parallel: Optional[int] = None) -> float:
+        """Wave-width occupancy proxy (DESIGN.md §2): mean fraction of the
+        achievable parallel width actually filled per launch."""
+        widths = [len(w) for w in self.waves] or [1]
+        cap = max_parallel or max(widths)
+        return sum(min(w, cap) for w in widths) / (len(widths) * cap)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "wall_seconds": self.wall_seconds,
+            "waves": len(self.waves),
+            **{f"window_{k}": v for k, v in self.window_stats.items()},
+            **{f"exec_{k}": v for k, v in self.exec_stats.items()},
+        }
+
+
+class WaveScheduler:
+    """Windowed out-of-order scheduler, wave-synchronous execution."""
+
+    def __init__(self, window_size: int = 32, executor: Optional[Any] = None, max_wave: Optional[int] = None):
+        self.window_size = window_size
+        self.executor = executor if executor is not None else FusedWaveExecutor()
+        self.max_wave = max_wave  # cap = number of "streams"; None = unbounded
+
+    def run(self, stream: Iterable[Task]) -> SchedulerReport:
+        window = SchedulingWindow(self.window_size)
+        tasks = list(stream)
+        window.submit_all(tasks)
+        waves: List[List[int]] = []
+        t0 = time.perf_counter()
+        while not window.drained():
+            ready = window.ready_tasks()
+            if not ready:
+                raise RuntimeError("scheduler stall: no READY kernels but window non-empty")
+            if self.max_wave is not None:
+                ready = ready[: self.max_wave]
+            for t in ready:
+                window.mark_executing(t)
+            self.executor.execute_wave(ready)
+            for t in ready:
+                window.retire(t)
+            waves.append([t.tid for t in ready])
+        self.executor.finalize()
+        wall = time.perf_counter() - t0
+        return SchedulerReport(window, self.executor.stats, wall, waves)
+
+
+class ThreadedStreamScheduler:
+    """Paper-faithful ACS-SW: K scheduler threads == K CUDA streams."""
+
+    def __init__(self, window_size: int = 32, num_streams: int = 4):
+        self.window_size = window_size
+        self.num_streams = num_streams
+
+    def run(self, stream: Iterable[Task]) -> SchedulerReport:
+        window = SchedulingWindow(self.window_size)
+        tasks = list(stream)
+        window.submit_all(tasks)
+        lock = threading.Lock()
+        stats = ExecStats()
+        jit_cache: Dict = {}
+        waves: List[List[int]] = []  # per-stream launch trace (width 1 each)
+
+        def stream_worker() -> None:
+            # Algorithm 2: poll for READY kernels until the stop condition.
+            while True:
+                with lock:
+                    if window.drained():
+                        return
+                    ready = window.ready_tasks()
+                    if not ready:
+                        task = None
+                    else:
+                        task = ready[0]
+                        window.mark_executing(task)
+                        fn = jit_cache.get(task.signature)
+                        if fn is None:
+                            fn = jax.jit(task.fn)
+                            jit_cache[task.signature] = fn
+                            stats.compiles += 1
+                        vals = task.input_values()
+                if task is None:
+                    time.sleep(0)  # yield; window not drained but nothing ready
+                    continue
+                out = fn(*vals)
+                jax.block_until_ready(out)  # StreamSync
+                with lock:
+                    task.write_outputs(out)
+                    window.retire(task)
+                    stats.dispatches += 1
+                    stats.tasks_run += 1
+                    stats.wave_widths.append(1)
+                    waves.append([task.tid])
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=stream_worker) for _ in range(self.num_streams)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wall = time.perf_counter() - t0
+        stats.exec_seconds = wall
+        if not window.drained():
+            raise RuntimeError("threaded scheduler exited before draining the window")
+        return SchedulerReport(window, stats, wall, waves)
+
+
+def run_serial(stream: Iterable[Task]) -> SchedulerReport:
+    """The single-stream baseline: program order, one dispatch per kernel."""
+    sched = WaveScheduler(window_size=1, executor=SerialExecutor())
+    return sched.run(stream)

@@ -1,0 +1,100 @@
+"""Task IR — the unit the ACS window schedules.
+
+A ``Task`` is the TPU-side analogue of a CUDA kernel launch packet
+(§II-A): an opcode, operand buffer references, the resolved read/write
+``Segment``s (the paper's launch-time ``get_addresses`` output), and a
+static cost estimate used by the wave packer and the roofline accounting.
+
+Tasks with equal ``signature`` are *batchable*: the wave executor may run
+them as one vmapped / grouped-GEMM launch — the TPU realization of
+"concurrent execution of independent kernels".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .buffers import Buffer, BufferView
+from .segments import Segment, SegmentSet
+
+__all__ = ["Task", "Operand", "operand_shape", "operand_dtype"]
+
+Operand = Union[Buffer, BufferView]
+
+_tid_counter = itertools.count()
+
+
+def operand_shape(op: Operand) -> Tuple[int, ...]:
+    if isinstance(op, BufferView):
+        if op.row_count is None:
+            raise ValueError("non-row views have no array shape")
+        return (op.row_count,) + tuple(op.buffer.shape[1:])
+    return tuple(op.shape)
+
+
+def operand_dtype(op: Operand) -> np.dtype:
+    buf = op.buffer if isinstance(op, BufferView) else op
+    return np.dtype(buf.dtype)
+
+
+@dataclasses.dataclass
+class Task:
+    """One schedulable kernel invocation."""
+
+    opcode: str
+    fn: Callable[..., Any]  # pure: (*input_values) -> output value | tuple
+    inputs: Tuple[Operand, ...]
+    outputs: Tuple[Operand, ...]
+    read_segments: SegmentSet
+    write_segments: SegmentSet
+    cost_flops: float = 0.0
+    cost_bytes: float = 0.0
+    tid: int = dataclasses.field(default_factory=lambda: next(_tid_counter))
+    # Extra python-scalar params baked into fn via the wrapper (kept for
+    # signature identity so compiled wave programs can be reused).
+    static_args: Tuple[Any, ...] = ()
+    # Unique id of the defining AcsKernel — disambiguates distinct kernels
+    # that share a display name (e.g. two lambdas): signature safety.
+    kernel_uid: int = -1
+
+    @property
+    def signature(self) -> Tuple:
+        """Batching/caching key: same signature => same compiled program."""
+        return (
+            self.opcode,
+            self.kernel_uid,
+            tuple((operand_shape(x), str(operand_dtype(x))) for x in self.inputs),
+            tuple((operand_shape(x), str(operand_dtype(x))) for x in self.outputs),
+            self.static_args,
+        )
+
+    def input_values(self) -> Tuple[Any, ...]:
+        return tuple(x.get_value() for x in self.inputs)
+
+    def write_outputs(self, results: Any) -> None:
+        if not isinstance(results, (tuple, list)):
+            results = (results,)
+        if len(results) != len(self.outputs):
+            raise ValueError(
+                f"task {self.opcode}#{self.tid}: fn returned {len(results)} "
+                f"values for {len(self.outputs)} outputs"
+            )
+        for out, val in zip(self.outputs, results):
+            out.set_value(val)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Task({self.opcode}#{self.tid}, in={len(self.inputs)}, out={len(self.outputs)})"
+
+
+def default_segments(
+    inputs: Sequence[Operand], outputs: Sequence[Operand]
+) -> Tuple[SegmentSet, SegmentSet]:
+    """Fig 17 default: every input read in full, every output written in full."""
+    return (
+        SegmentSet([x.segment for x in inputs]),
+        SegmentSet([x.segment for x in outputs]),
+    )

@@ -1,0 +1,135 @@
+"""The ACS scheduling window (paper §III-C/D, Fig 14/15).
+
+Faithful mechanics:
+
+* kernels arrive through an **input FIFO** in program order;
+* a fixed-size **window** (default N=32, the paper's chosen size) holds the
+  kernels currently being tracked;
+* on insertion, the incoming kernel is dependency-checked against every
+  kernel already resident (Algorithm 1 over read/write segments) and the
+  overlapping residents form its **upstream list**;
+* a kernel whose upstream list is empty is **READY**; launched kernels are
+  EXECUTING; on completion the kernel is retired, removed from every
+  upstream list, and vacancies are refilled from the FIFO.
+
+Note on Algorithm 1 as printed: it tests the incoming kernel's *writes*
+against residents' reads+writes (WAR + WAW) only. Correctness also needs
+RAW (incoming *reads* vs residents' writes) — §III-C's prose ("overlaps
+between read segments and write segments") implies it; we implement the
+full RAW/WAR/WAW check (`segments.depends_on`).
+
+Because insertion order == program order, dependencies only ever point
+from newer to older kernels; the window can never deadlock, and a window
+of size 1 degenerates to the serial baseline (tested property).
+"""
+
+from __future__ import annotations
+
+import collections
+import enum
+from typing import Deque, Dict, Iterable, List, Optional
+
+from .segments import depends_on, window_upstreams
+from .task import Task
+
+__all__ = ["TaskState", "SchedulingWindow", "WindowStats"]
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"
+    READY = "ready"
+    EXECUTING = "executing"
+
+
+class _Slot:
+    __slots__ = ("task", "upstream", "state")
+
+    def __init__(self, task: Task, upstream: set, state: TaskState):
+        self.task = task
+        self.upstream = upstream  # set of tids this task waits on
+        self.state = state
+
+
+class WindowStats:
+    """Counters for the benchmarks (dep checks mirror Table II)."""
+
+    def __init__(self) -> None:
+        self.dep_checks = 0
+        self.inserted = 0
+        self.retired = 0
+        self.max_resident = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "dep_checks": self.dep_checks,
+            "inserted": self.inserted,
+            "retired": self.retired,
+            "max_resident": self.max_resident,
+        }
+
+
+class SchedulingWindow:
+    def __init__(self, size: int = 32):
+        if size < 1:
+            raise ValueError("window size must be >= 1")
+        self.size = size
+        self.fifo: Deque[Task] = collections.deque()
+        self.slots: "collections.OrderedDict[int, _Slot]" = collections.OrderedDict()
+        self.stats = WindowStats()
+
+    # -- producer side ----------------------------------------------------
+    def submit(self, task: Task) -> None:
+        self.fifo.append(task)
+        self._fill()
+
+    def submit_all(self, tasks: Iterable[Task]) -> None:
+        self.fifo.extend(tasks)
+        self._fill()
+
+    # -- scheduler side ---------------------------------------------------
+    def ready_tasks(self) -> List[Task]:
+        """All READY kernels, oldest-first (they may launch concurrently)."""
+        return [s.task for s in self.slots.values() if s.state is TaskState.READY]
+
+    def mark_executing(self, task: Task) -> None:
+        slot = self.slots[task.tid]
+        if slot.state is not TaskState.READY:
+            raise RuntimeError(f"task {task.tid} launched while {slot.state}")
+        slot.state = TaskState.EXECUTING
+
+    def retire(self, task: Task) -> None:
+        """Kernel completed: drop it, update upstream lists, refill window."""
+        slot = self.slots.pop(task.tid)
+        if slot.state is not TaskState.EXECUTING:
+            raise RuntimeError(f"task {task.tid} retired while {slot.state}")
+        for other in self.slots.values():
+            other.upstream.discard(task.tid)
+            if not other.upstream and other.state is TaskState.PENDING:
+                other.state = TaskState.READY
+        self.stats.retired += 1
+        self._fill()
+
+    def drained(self) -> bool:
+        return not self.fifo and not self.slots
+
+    def resident(self) -> int:
+        return len(self.slots)
+
+    # -- internals ----------------------------------------------------------
+    def _fill(self) -> None:
+        while self.fifo and len(self.slots) < self.size:
+            task = self.fifo.popleft()
+            tids = list(self.slots.keys())
+            self.stats.dep_checks += len(tids)
+            # one vectorized interval pass over the whole window (Table II)
+            mask = window_upstreams(
+                task.read_segments,
+                task.write_segments,
+                [self.slots[t].task.read_segments for t in tids],
+                [self.slots[t].task.write_segments for t in tids],
+            )
+            upstream = {tid for tid, hit in zip(tids, mask) if hit}
+            state = TaskState.PENDING if upstream else TaskState.READY
+            self.slots[task.tid] = _Slot(task, upstream, state)
+            self.stats.inserted += 1
+            self.stats.max_resident = max(self.stats.max_resident, len(self.slots))

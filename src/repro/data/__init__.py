@@ -1,0 +1,5 @@
+"""Deterministic, resumable synthetic token pipeline."""
+
+from .pipeline import DataCursor, TokenPipeline
+
+__all__ = ["DataCursor", "TokenPipeline"]

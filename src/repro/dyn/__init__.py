@@ -1,0 +1,41 @@
+"""Dynamic & static DNN workloads — the paper's workloads 2 and 3 (§II-C, §V).
+
+* ``instanas``       — InstaNAS-like instance-aware dynamic CNN: a per-input
+                       controller picks a subset of candidate blocks per stage.
+* ``dynamic_routing``— grid-of-cells segmentation net with per-input gates.
+* ``condconv``       — CondConv mixture-of-experts CNN: example-dependent
+                       convolution weights mixed at runtime.
+* ``static_nets``    — NAS-produced irregular static CNNs: NASNet-like,
+                       AmoebaNet-like, SqueezeNet, RandomWire.
+
+Every network is expressed as a stream of small ACS kernels over a
+``BufferPool`` — batch size 1 (paper §V), small feature maps, so the GPU/TPU
+would be underutilized by serial execution.
+"""
+
+from .blocks import DynParams, init_conv, init_dense
+from .condconv import build_condconv, init_condconv
+from .dynamic_routing import build_dynamic_routing, init_dynamic_routing
+from .instanas import build_instanas, init_instanas
+from .static_nets import (
+    build_amoebanet,
+    build_nasnet,
+    build_randwire,
+    build_squeezenet,
+    init_amoebanet,
+    init_nasnet,
+    init_randwire,
+    init_squeezenet,
+)
+
+WORKLOADS = {
+    "instanas": (init_instanas, build_instanas, True),
+    "dynamic_routing": (init_dynamic_routing, build_dynamic_routing, True),
+    "condconv": (init_condconv, build_condconv, True),
+    "nasnet": (init_nasnet, build_nasnet, False),
+    "amoebanet": (init_amoebanet, build_amoebanet, False),
+    "squeezenet": (init_squeezenet, build_squeezenet, False),
+    "randwire": (init_randwire, build_randwire, False),
+}
+
+__all__ = ["WORKLOADS", "DynParams"] + [n for n in dir() if n.startswith(("build_", "init_"))]

@@ -1,0 +1,210 @@
+"""Small-CNN kernel library for the dynamic/static DNN workloads.
+
+Each kernel is an :class:`AcsKernel` over NCHW tensors (batch 1, small
+feature maps — the paper's "<200 CTAs" regime, Fig 8). Weights are
+read-only buffers: reads never hazard against reads, so weight sharing
+does not serialize independent branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.buffers import Buffer, BufferPool
+from ..core.wrapper import AcsKernel, TaskStream
+
+__all__ = [
+    "conv", "dwconv", "pool_avg", "pool_max", "add2", "add3", "concat2",
+    "dense", "gap", "mix_weights", "init_conv", "init_dense", "DynParams",
+    "launch_conv", "launch_add", "conv_flops",
+]
+
+
+# -- kernel bodies -----------------------------------------------------------
+
+def _conv_fn(x, w, stride, relu):
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    return jax.nn.relu(out) if relu else out
+
+
+def _dwconv_fn(x, w, stride, relu):
+    c = x.shape[1]
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"), feature_group_count=c,
+    )
+    return jax.nn.relu(out) if relu else out
+
+
+def _pool_fn(x, kind, k, stride):
+    if kind == "avg":
+        out = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 1, k, k), (1, 1, stride, stride), "SAME"
+        ) / float(k * k)
+    else:
+        out = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, stride, stride), "SAME"
+        )
+    return out
+
+
+def _add2_fn(a, b):
+    return a + b
+
+
+def _add3_fn(a, b, c):
+    return a + b + c
+
+
+def _concat2_fn(a, b):
+    return jnp.concatenate([a, b], axis=1)
+
+
+def _dense_fn(x, w):
+    return x @ w
+
+
+def _gap_fn(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def _mix_weights_fn(experts, r):
+    """CondConv: example-dependent weights = Σ_e σ(r_e) · W_e.
+    experts [E, O, I, kh, kw]; r [1, E] -> [O, I, kh, kw]."""
+    return jnp.einsum("e,eoihw->oihw", jax.nn.sigmoid(r[0]), experts)
+
+
+def _upsample2_fn(x):
+    """Nearest-neighbour 2x upsample (NCHW)."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=2), 2, axis=3)
+
+
+def conv_flops(inputs, outputs, *static):
+    from ..core.task import operand_shape
+
+    xs, ws = operand_shape(inputs[0]), operand_shape(inputs[1])
+    os = operand_shape(outputs[0])
+    kh, kw = ws[-2], ws[-1]
+    cin = ws[1]
+    return 2.0 * np.prod(os, dtype=np.float64) * cin * kh * kw
+
+
+conv = AcsKernel(name="conv", fn=_conv_fn, flops=conv_flops)
+dwconv = AcsKernel(name="dwconv", fn=_dwconv_fn, flops=conv_flops)
+pool_avg = AcsKernel(name="pool_avg", fn=lambda x, k, s: _pool_fn(x, "avg", k, s))
+pool_max = AcsKernel(name="pool_max", fn=lambda x, k, s: _pool_fn(x, "max", k, s))
+add2 = AcsKernel(name="add2", fn=_add2_fn)
+add3 = AcsKernel(name="add3", fn=_add3_fn)
+concat2 = AcsKernel(name="concat2", fn=_concat2_fn)
+dense = AcsKernel(name="dense", fn=_dense_fn,
+                  flops=lambda i, o, *s: 2.0 * np.prod((i[0].shape[0], i[1].shape[0], i[1].shape[1]), dtype=np.float64))
+gap = AcsKernel(name="gap", fn=_gap_fn)
+mix_weights = AcsKernel(name="mix_weights", fn=_mix_weights_fn)
+upsample2 = AcsKernel(name="upsample2", fn=_upsample2_fn)
+
+
+def launch_upsample2(stream: TaskStream, pool: BufferPool, x: Buffer) -> Buffer:
+    out = pool.alloc((x.shape[0], x.shape[1], x.shape[2] * 2, x.shape[3] * 2), np.float32)
+    upsample2.launch(stream, inputs=(x,), outputs=(out,))
+    return out
+
+
+# -- parameter helpers --------------------------------------------------------
+
+@dataclasses.dataclass
+class DynParams:
+    """Named weight buffers for one network instance."""
+
+    pool: BufferPool
+    weights: Dict[str, Buffer] = dataclasses.field(default_factory=dict)
+
+    def conv_w(self, name: str, cout: int, cin: int, k: int, rng) -> Buffer:
+        if name not in self.weights:
+            w = (rng.randn(cout, cin, k, k) * np.sqrt(2.0 / (cin * k * k))).astype(np.float32)
+            self.weights[name] = self.pool.from_array(jnp.asarray(w), name=name)
+        return self.weights[name]
+
+    def dense_w(self, name: str, din: int, dout: int, rng) -> Buffer:
+        if name not in self.weights:
+            w = (rng.randn(din, dout) / np.sqrt(din)).astype(np.float32)
+            self.weights[name] = self.pool.from_array(jnp.asarray(w), name=name)
+        return self.weights[name]
+
+    def raw(self, name: str, arr) -> Buffer:
+        if name not in self.weights:
+            self.weights[name] = self.pool.from_array(jnp.asarray(arr), name=name)
+        return self.weights[name]
+
+
+def init_conv(rng, cout, cin, k):
+    return (rng.randn(cout, cin, k, k) * np.sqrt(2.0 / (cin * k * k))).astype(np.float32)
+
+
+def init_dense(rng, din, dout):
+    return (rng.randn(din, dout) / np.sqrt(din)).astype(np.float32)
+
+
+# -- launch helpers ------------------------------------------------------------
+
+def launch_conv(stream: TaskStream, pool: BufferPool, x: Buffer, w: Buffer,
+                *, stride: int = 1, relu: bool = True, depthwise: bool = False) -> Buffer:
+    cout = w.shape[0] if not depthwise else x.shape[1]
+    h = -(-x.shape[2] // stride)
+    wd = -(-x.shape[3] // stride)
+    out = pool.alloc((x.shape[0], cout, h, wd), np.float32)
+    kern = dwconv if depthwise else conv
+    kern.launch(stream, inputs=(x, w), outputs=(out,), static_args=(stride, relu))
+    return out
+
+
+def launch_pool(stream: TaskStream, pool: BufferPool, x: Buffer, *, kind: str = "avg",
+                k: int = 3, stride: int = 1) -> Buffer:
+    h = -(-x.shape[2] // stride)
+    w = -(-x.shape[3] // stride)
+    out = pool.alloc((x.shape[0], x.shape[1], h, w), np.float32)
+    (pool_avg if kind == "avg" else pool_max).launch(
+        stream, inputs=(x,), outputs=(out,), static_args=(k, stride)
+    )
+    return out
+
+
+def launch_add(stream: TaskStream, pool: BufferPool, xs) -> Buffer:
+    xs = list(xs)
+    if len(xs) == 1:
+        return xs[0]
+    acc = xs[0]
+    i = 1
+    while i < len(xs):
+        take = xs[i : i + 2]
+        out = pool.alloc(tuple(acc.shape), np.float32)
+        if len(take) == 2:
+            add3.launch(stream, inputs=(acc, take[0], take[1]), outputs=(out,))
+            i += 2
+        else:
+            add2.launch(stream, inputs=(acc, take[0]), outputs=(out,))
+            i += 1
+        acc = out
+    return acc
+
+
+def launch_concat(stream: TaskStream, pool: BufferPool, a: Buffer, b: Buffer) -> Buffer:
+    out = pool.alloc((a.shape[0], a.shape[1] + b.shape[1], a.shape[2], a.shape[3]), np.float32)
+    concat2.launch(stream, inputs=(a, b), outputs=(out,))
+    return out
+
+
+def launch_classifier(stream: TaskStream, pool: BufferPool, x: Buffer, params: DynParams,
+                      n_classes: int, rng) -> Buffer:
+    pooled = pool.alloc((x.shape[0], x.shape[1]), np.float32)
+    gap.launch(stream, inputs=(x,), outputs=(pooled,))
+    w = params.dense_w("classifier", x.shape[1], n_classes, rng)
+    logits = pool.alloc((x.shape[0], n_classes), np.float32)
+    dense.launch(stream, inputs=(pooled, w), outputs=(logits,))
+    return logits

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots (+ jnp oracles in ref.py).
+
+flash_attention  — blocked online-softmax attention (GQA/causal/local/softcap)
+grouped_matmul   — ragged grouped GEMM: a wave of small GEMMs in one launch
+lru_scan         — chunked linear recurrence (RG-LRU / Mamba SSM)
+wave_elementwise — descriptor-table megakernel for ACS-HW elementwise waves
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .grouped_matmul import grouped_matmul
+from .lru_scan import lru_scan
+from .wave_elementwise import apply_wave, wave_elementwise
+
+__all__ = [
+    "ops", "ref", "flash_attention", "grouped_matmul", "lru_scan",
+    "wave_elementwise", "apply_wave",
+]

@@ -1,0 +1,157 @@
+"""Blocked online-softmax attention (flash attention) for TPU.
+
+One Pallas program per (batch, head, q-block); the k-dimension is the
+innermost grid axis so the VMEM scratch accumulators (m, l, acc) persist
+across k-blocks — the standard TPU flash pattern. Supports:
+
+* GQA (kv-head sharing) via the k/v index map (h -> h // group),
+* causal masking with a global ``q_offset`` (decode: Sq=1 against a long
+  KV cache),
+* local / sliding-window masking (recurrentgemma, h2o-danube, gemma2
+  local layers),
+* gemma2-style logit softcapping,
+* ragged kv length (``kv_len``) so callers can pad Sk to the block size.
+
+Block shapes are MXU-aligned by default (128 x 128 tiles; D is the lane
+dimension). VMEM working set per program:
+``bq*D (q) + bk*D (k) + bk*D (v) + bq*D (acc) + 2*bq`` floats — with
+bq=bk=128, D=128 that is ~0.26 MB, far under the ~16 MB VMEM budget,
+leaving headroom for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, softcap, q_offset, prefix_len, kv_len,
+    block_q, block_k, nk,
+):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, D]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qi = pl.program_id(2)
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if prefix_len:
+        mask |= kpos < prefix_len
+    mask &= kpos < kv_len
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]  # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = jnp.where(l == 0.0, 0.0, acc_scr[...] / safe)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "q_offset", "prefix_len",
+        "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    prefix_len: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_pad = -(-sq // block_q) * block_q
+    sk_pad = -(-sk // block_k) * block_k
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+    nq, nk = sq_pad // block_q, sk_pad // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, prefix_len=prefix_len, kv_len=sk,
+        block_q=block_q, block_k=block_k, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

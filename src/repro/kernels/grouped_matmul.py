@@ -1,0 +1,75 @@
+"""Ragged grouped GEMM — N small matmuls in ONE kernel launch.
+
+This is the TPU realization of ACS's "concurrent execution of independent
+small kernels": a wave of homogeneous GEMM tasks (MoE experts after
+routing, or same-signature ACS tasks) is laid out as row-groups of one
+[M, K] operand, and a single Pallas launch computes every group against
+its own weight ``w[g]``. The per-m-tile group id is a *scalar-prefetch*
+operand (megablocks-style), so the weight block index map is
+data-dependent — the kernel equivalent of the window's runtime dispatch.
+
+Grid: (M/bm, N/bn), K kept whole per program (experts' K is small for the
+assigned MoE archs: deepseek d=5120 -> bm*K + K*bn + bm*bn fits VMEM with
+bm=bn=128 up to K≈24k).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_matmul"]
+
+
+def _gmm_kernel(tile_groups_ref, x_ref, w_ref, o_ref):
+    # x_ref: [bm, K]; w_ref: [1, K, bn] (the tile's group weights); o_ref: [bm, bn]
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def grouped_matmul(
+    x: jax.Array,            # [M, K] rows grouped (padded per group to block_m)
+    w: jax.Array,            # [G, K, N]
+    tile_groups: jax.Array,  # [M // block_m] int32 group id per m-tile
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    m, k = x.shape
+    g, _, n = w.shape
+    assert m % block_m == 0, (m, block_m)
+    block_n = min(block_n, n)
+    n_pad = -(-n // block_n) * block_n
+    if n_pad != n:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, n_pad - n)))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (m // block_m, n_pad // block_n)
+    out = pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, k), lambda mi, ni, tg: (mi, 0)),
+                pl.BlockSpec((1, k, block_n), lambda mi, ni, tg: (tg[mi], 0, ni)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, tg: (mi, ni)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), x.dtype),
+        interpret=interpret,
+    )(tile_groups.astype(jnp.int32), x, w)
+    return out[:, :n]

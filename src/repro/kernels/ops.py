@@ -1,0 +1,69 @@
+"""Public jit'd dispatchers for the Pallas kernels.
+
+Each op chooses between the Pallas kernel (TPU, or interpret-mode for
+validation) and the pure-jnp oracle in ``ref.py`` (the XLA path used by
+the CPU dry-run lowering and any backend without Pallas support).
+Set ``use_pallas=False`` to force the reference path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .grouped_matmul import grouped_matmul as _gmm
+from .lru_scan import lru_scan as _lru
+from .wave_elementwise import apply_wave, wave_elementwise as _wave
+
+__all__ = ["attention", "grouped_matmul", "lru_scan", "wave_step"]
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+              q_offset=0, prefix_len=0, use_pallas: Optional[bool] = None,
+              **block_kw):
+    """Multi-head attention with GQA/causal/local/prefix/softcap (see ref)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                      scale=scale, q_offset=q_offset, prefix_len=prefix_len,
+                      **block_kw)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale, q_offset=q_offset,
+                             prefix_len=prefix_len)
+
+
+def grouped_matmul(x, w, tile_groups, *, block_m=128,
+                   use_pallas: Optional[bool] = None, **block_kw):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return _gmm(x, w, tile_groups, block_m=block_m, **block_kw)
+    return ref.grouped_matmul_ref(x, w, tile_groups, block_m=block_m)
+
+
+def lru_scan(a, b, h0, *, use_pallas: Optional[bool] = None, **block_kw):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return _lru(a, b, h0, **block_kw)
+    return ref.lru_scan_ref(a, b, h0)
+
+
+def wave_step(slab, desc, *, branches, use_pallas: Optional[bool] = None):
+    """Execute one ACS wave of elementwise tasks over the row slab and
+    scatter the results back (see wave_elementwise.py)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        rows = _wave(slab, desc, branches=branches)
+    else:
+        rows = jnp.stack([
+            jax.lax.switch(desc[i, 0], branches, slab[desc[i, 1]], slab[desc[i, 2]])
+            for i in range(desc.shape[0])
+        ])
+    return apply_wave(slab, desc, rows)

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: each kernel's interpret-mode output is
+``assert_allclose``'d against these across shape/dtype sweeps (tests/).
+They are also the XLA fallback path used on non-TPU backends (and thus the
+path the dry-run lowers — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "attention_ref",
+    "grouped_matmul_ref",
+    "lru_scan_ref",
+    "wave_elementwise_ref",
+]
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, Dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,   # local/sliding window size (keys kept)
+    softcap: Optional[float] = None,  # gemma2-style logit soft capping
+    scale: Optional[float] = None,
+    q_offset: int = 0,  # global position of q[0] (decode: Sk - Sq)
+    prefix_len: int = 0,  # prefix-LM: first N keys visible to everyone (vlm)
+) -> jax.Array:
+    """Masked softmax attention with GQA, causal/local/prefix masks, softcap.
+
+    GQA is computed via a grouped einsum (q reshaped to [B, Hkv, G, Sq, D])
+    — no K/V repeat materialization, so a decode step's HLO bytes reflect
+    the true KV-cache traffic.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    scale = (1.0 / np.sqrt(d)) if scale is None else scale
+
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkld->bkgql", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = q_offset + jnp.arange(sq)[:, None]  # global q positions
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    if prefix_len:
+        mask |= cols < prefix_len
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zeros
+    out = jnp.einsum("bkgql,bkld->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+
+def grouped_matmul_ref(
+    x: jax.Array,          # [M, K] rows sorted by group, padded per group
+    w: jax.Array,          # [G, K, N]
+    tile_groups: jax.Array,  # [M // bm] int32: group id of each m-tile
+    *,
+    block_m: int,
+) -> jax.Array:
+    """Ragged grouped GEMM oracle: out[t] = x[t] @ w[tile_groups[t]]."""
+    m, k = x.shape
+    g, _, n = w.shape
+    n_tiles = m // block_m
+    xt = x.reshape(n_tiles, block_m, k)
+    wt = w[tile_groups]  # [T, K, N]
+    out = jnp.einsum("tmk,tkn->tmn", xt.astype(jnp.float32), wt.astype(jnp.float32))
+    return out.reshape(m, n).astype(x.dtype)
+
+
+def lru_scan_ref(
+    a: jax.Array,   # [B, S, D] decay
+    b: jax.Array,   # [B, S, D] input
+    h0: jax.Array,  # [B, D]
+) -> jax.Array:
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t (RG-LRU/SSM)."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    def per_batch(a1, b1, h01):
+        _, hs = jax.lax.scan(step, h01.astype(jnp.float32), (a1.astype(jnp.float32), b1.astype(jnp.float32)))
+        return hs
+
+    out = jax.vmap(per_batch)(a, b, h0)
+    return out.astype(b.dtype)
+
+
+def wave_elementwise_ref(slab, opcodes, in_ids, out_ids, branches):
+    """One ACS wave of elementwise tasks over a row slab (python loop oracle)."""
+    new = slab
+    src = slab
+    for i in range(opcodes.shape[0]):
+        op = int(opcodes[i])
+        x = src[int(in_ids[i, 0])]
+        y = src[int(in_ids[i, 1])]
+        res = branches[op](x, y)
+        new = new.at[int(out_ids[i])].set(res)
+    return new

@@ -1,0 +1,71 @@
+"""ACS-HW wave megakernel: one launch executes a whole wave of small
+heterogeneous elementwise tasks from a descriptor table.
+
+This is the Pallas analogue of the paper's hardware scheduling window
+dispatching ready kernels without host round-trips (Fig 20): the grid
+iterates over wave *slots*; each program reads its descriptor (opcode +
+operand row ids, scalar-prefetched so the input index maps are data-
+dependent), applies the opcode branch, and writes its own output row.
+Rows in a slab are VMEM-block sized; tasks in a wave are independent by
+construction (the window guarantees it), so slot programs can run in any
+order.
+
+The kernel returns the S written rows; ``ops.apply_wave`` scatters them
+back into the slab (out-of-place, keeping the functional JAX style).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wave_elementwise", "apply_wave"]
+
+
+def _wave_kernel(desc_ref, x_ref, y_ref, o_ref, *, branches):
+    si = pl.program_id(0)
+    op = desc_ref[si, 0]
+    x = x_ref[0]
+    y = y_ref[0]
+    o_ref[0, :] = jax.lax.switch(op, branches, x, y).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("branches", "interpret"))
+def wave_elementwise(
+    slab: jax.Array,      # [R, D] buffer rows
+    desc: jax.Array,      # [S, 4] int32: (opcode, in0_row, in1_row, out_row)
+    *,
+    branches: tuple,      # tuple of fn(x, y) -> [D]
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Returns [S, D]: the result row of each wave slot."""
+    s = desc.shape[0]
+    r, d = slab.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = pl.pallas_call(
+        functools.partial(_wave_kernel, branches=branches),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(s,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda si, desc: (desc[si, 1], 0)),
+                pl.BlockSpec((1, d), lambda si, desc: (desc[si, 2], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda si, desc: (si, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, d), slab.dtype),
+        interpret=interpret,
+    )(desc.astype(jnp.int32), slab, slab)
+    return out
+
+
+def apply_wave(slab, desc, out_rows):
+    """Scatter wave results back into the slab (out rows are unique within a
+    wave — WAW hazards would have serialized the tasks into different waves)."""
+    return slab.at[desc[:, 3]].set(out_rows)

@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e): for every (arch x shape x mesh) cell,
+``jit(step).lower(**input_specs).compile()`` must succeed on the production
+meshes — (16, 16) single pod and (2, 16, 16) = 512 chips multi-pod. Records
+memory_analysis / cost_analysis / per-collective byte counts to a JSON
+results file consumed by EXPERIMENTS.md and launch/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+The XLA_FLAGS line above must execute before ANY other jax import — jax
+locks the device count at first init (and smoke tests must keep seeing one
+device, so this is NOT in conftest/pyproject).
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCHS, SHAPES, cells, get_config
+from .mesh import make_production_mesh
+from .roofline import collective_bytes_from_text, roofline_terms
+from .steps import StepBundle
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, verbose: bool = True):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = StepBundle(cfg, mesh)
+    t0 = time.time()
+    lowered = bundle.lower(shape, SHAPES)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes_from_text(text)
+
+    def _get(obj, name):
+        v = getattr(obj, name, None)
+        return int(v) if v is not None else None
+
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": _get(mem, "argument_size_in_bytes"),
+            "output_bytes": _get(mem, "output_size_in_bytes"),
+            "temp_bytes": _get(mem, "temp_size_in_bytes"),
+            "generated_code_bytes": _get(mem, "generated_code_size_in_bytes"),
+        },
+    }
+    if verbose:
+        print(json.dumps(record, indent=2))
+        print(compiled.memory_analysis())
+    return record
+
+
+def save(record):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    data = {}
+    if RESULTS.exists():
+        data = json.loads(RESULTS.read_text())
+    key = f'{record["arch"]}|{record["shape"]}|{record["mesh"]}'
+    data[key] = record
+    RESULTS.write_text(json.dumps(data, indent=1, sort_keys=True))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    done = set()
+    if args.skip_done and RESULTS.exists():
+        done = set(json.loads(RESULTS.read_text()))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    todo = []
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    for arch in archs:
+        shapes = cells(get_config(arch)) if args.all or not args.shape else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                key = f'{arch}|{shape}|{"pod2x16x16" if mp else "16x16"}'
+                if key in done:
+                    continue
+                todo.append((arch, shape, mp))
+
+    failures = []
+    for arch, shape, mp in todo:
+        tag = f'{arch} x {shape} x {"multi" if mp else "single"}'
+        print(f"=== {tag}", flush=True)
+        try:
+            record = run_cell(arch, shape, mp, verbose=False)
+            save(record)
+            print(f"    ok: compile {record['compile_s']}s, "
+                  f"flops/dev {record['flops_per_device']:.3e}, "
+                  f"coll {record['collectives']['total_bytes']:.3e} B", flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures.append((tag, repr(e)))
+            print(f"    FAIL: {e!r}", flush=True)
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        sys.exit(1)
+    print(f"dry-run complete: {len(todo)} cells")
+
+
+if __name__ == "__main__":
+    main()

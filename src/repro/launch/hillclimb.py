@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimbing driver: apply named optimization steps to the three
+chosen cells, re-derive the roofline terms after each, and append the
+hypothesis -> change -> before -> after record to
+results/perf_iterations.json (the §Perf log in EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell minicpm-2b/train_4k
+    PYTHONPATH=src python -m repro.launch.hillclimb --all
+"""
+
+import argparse
+import contextlib
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from ..configs import SHAPES, get_config
+from ..models.transformer import remat_policy
+from .mesh import make_production_mesh
+from .roofline import analyze_unrolled, roofline_terms
+from .roofline_run import model_flops_per_device
+from .steps import StepBundle
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "perf_iterations.json"
+
+
+def _pad_heads(cfg, n):
+    return dataclasses.replace(cfg, pad_heads_to=n)
+
+
+def _bf16_combine(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, combine_dtype="bfloat16")
+    )
+
+
+def _capacity(cfg, f):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=f)
+    )
+
+
+def _grouped_dispatch(cfg, g):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=g)
+    )
+
+
+# Each step: (name, hypothesis, config transform, remat policy)
+PLANS = {
+    "minicpm-2b/train_4k": [
+        ("pad_heads_48",
+         "36 heads don't divide TP=16, so attention is sequence-sharded: "
+         "k/v all-gathers across 'model' every layer (fwd+bwd+remat) "
+         "dominate the 9.3s collective term. Padding heads to 48 (zero "
+         "heads, numerics-exact) shards attention 16-way: predicted "
+         "collective -> ~1/2 (the gathers go away, Megatron psums remain), "
+         "useful-FLOPs up from 0.42 (replicated attention eliminated).",
+         lambda c: _pad_heads(c, 48), "nothing"),
+        ("remat_dots",
+         "nothing_saveable recomputes every stage fwd in bwd INCLUDING its "
+         "collectives (~1.5x collective traffic). Saving dot outputs skips "
+         "recompute of GEMMs + their psums: predicted collective -1/3, "
+         "compute term -~25%, at higher activation memory.",
+         lambda c: c, "dots"),
+    ],
+    "granite-moe-3b-a800m/train_4k": [
+        ("pad_heads_32",
+         "24 heads vs TP=16: same sequence-shard fallback as minicpm; "
+         "attention replication also poisons useful-FLOPs (0.295). Pad to "
+         "32: predicted collective down ~30%, useful up ~1.5x.",
+         lambda c: _pad_heads(c, 32), "nothing"),
+        ("bf16_combine",
+         "The MoE output combine (scatter-add over the TP-sharded expert "
+         "axis) is the layer's psum and currently rides f32: [T,d] x 59 "
+         "layers x fwd/bwd. bf16 wire format halves those bytes: predicted "
+         "collective -~40% of the MoE share.",
+         _bf16_combine, "nothing"),
+        ("remat_dots",
+         "As for minicpm: skip bwd recompute of expert GEMMs and their "
+         "combines; predicted collective -~1/3.",
+         lambda c: c, "dots"),
+        ("grouped_dispatch_16",
+         "PROFILE FINDING (refutes the two hypotheses above): the dominant "
+         "collective is a 4.8GB f32 all-reduce of [E_loc, C, d] with "
+         "C = 262144 — expert dispatch runs over the GLOBAL token axis, so "
+         "every device carries 16x more dispatch rows than its own tokens "
+         "and GSPMD reduces them across the mesh. Routing within 16 "
+         "batch-aligned groups (= DP degree) makes gather/compute/combine "
+         "shard-local; predicted collective -> ~1/4.",
+         lambda c: _grouped_dispatch(c, 16), "dots"),
+    ],
+    "deepseek-v2-236b/train_4k": [
+        ("bf16_combine",
+         "deepseek train is the most collective-bound cell (151.9s vs "
+         "6.9s compute). The dominant stream is the expert-combine psum "
+         "([32k, 5120] f32 x 59 MoE layers x fwd+bwd+remat). bf16 combine "
+         "halves it: predicted collective -> ~90-110s.",
+         _bf16_combine, "nothing"),
+        ("remat_dots",
+         "Remat recompute doubles fwd-side collectives in bwd. Saving dot "
+         "outputs removes the recomputed gathers/psums: predicted "
+         "collective -~30%, memory term rises (acceptable: HBM has slack "
+         "in memory_analysis).",
+         lambda c: c, "dots"),
+        ("capacity_1.0",
+         "Capacity factor 1.25 inflates every expert GEMM and its gather/"
+         "combine rows by 25%. cf=1.0 trades marginal router-overflow "
+         "drops for a uniform 20% cut of MoE compute AND combine bytes.",
+         lambda c: _capacity(c, 1.0), "dots"),
+        ("grouped_dispatch_16",
+         "Same profile finding as granite: dispatch over the global token "
+         "axis carries DPx redundant rows through every device. Group-"
+         "local dispatch (16 batch-aligned groups) shards the whole MoE "
+         "block over (dp, tp); predicted collective -> well under half.",
+         lambda c: _grouped_dispatch(c, 16), "dots"),
+    ],
+}
+
+
+def measure(cfg, shape, policy_name):
+    mesh = make_production_mesh(multi_pod=False)
+    ctx = remat_policy(policy_name)
+    with ctx:
+        total, _, _ = analyze_unrolled(cfg, mesh, shape, SHAPES, StepBundle)
+    mf = model_flops_per_device(cfg, shape, mesh.devices.size)
+    return roofline_terms(total["flops"], total["bytes"], total["wire"],
+                          model_flops=mf)
+
+
+def run_cell(cell: str):
+    arch, shape = cell.split("/")
+    base_cfg = get_config(arch)
+
+    data = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+    log = data.get(cell, [])
+    done = {e["step"] for e in log}
+
+    if "baseline" not in done:
+        t = measure(base_cfg, shape, "nothing")
+        log.append({"step": "baseline", "hypothesis": "(paper-faithful baseline)",
+                    **t.as_dict()})
+        print(f"[{cell}] baseline: {t.as_dict()}", flush=True)
+
+    cfg = base_cfg
+    policy = "nothing"
+    for name, hypothesis, transform, pol in PLANS[cell]:
+        cfg = transform(cfg)
+        policy = pol
+        if name in done:
+            continue
+        t0 = time.time()
+        t = measure(cfg, shape, policy)
+        rec = {"step": name, "hypothesis": hypothesis, "analysis_s":
+               round(time.time() - t0, 1), **t.as_dict()}
+        log.append(rec)
+        print(f"[{cell}] {name}: dominant={t.dominant} "
+              f"c={t.compute_s:.3f} m={t.memory_s:.3f} x={t.collective_s:.3f} "
+              f"useful={t.useful_flops_fraction:.3f}", flush=True)
+        data[cell] = log
+        RESULTS.parent.mkdir(parents=True, exist_ok=True)
+        RESULTS.write_text(json.dumps(data, indent=1))
+    data[cell] = log
+    RESULTS.write_text(json.dumps(data, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    cells = list(PLANS) if args.all or not args.cell else [args.cell]
+    for cell in cells:
+        run_cell(cell)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh definition.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state: the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+device use, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,98 @@
+"""Generate the EXPERIMENTS.md dry-run and roofline tables from
+results/dryrun.json and results/roofline.json.
+
+    PYTHONPATH=src python -m repro.launch.report > results/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table() -> str:
+    data = json.loads((ROOT / "results" / "dryrun.json").read_text())
+    lines = [
+        "| arch | shape | mesh | compile s | flops/dev | HLO bytes/dev | coll bytes/dev | temp mem/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(data):
+        r = data[key]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {r['flops_per_device']:.2e} | {fmt_bytes(r['bytes_per_device'])} "
+            f"| {fmt_bytes(r['collectives']['total_bytes'])} "
+            f"| {fmt_bytes(r['memory']['temp_bytes'])} |"
+        )
+    n = len(data)
+    return f"{n} cells, all `.lower().compile()` OK.\n\n" + "\n".join(lines)
+
+
+def roofline_table() -> str:
+    data = json.loads((ROOT / "results" / "roofline.json").read_text())
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful-FLOPs frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(data):
+        r = data[key]
+        uf = r.get("useful_flops_fraction")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['dominant']}** | {uf:.3f} |" if uf else
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['dominant']}** | - |"
+        )
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    data = json.loads((ROOT / "results" / "perf_iterations.json").read_text())
+    out = []
+    for cell in sorted(data):
+        out.append(f"\n### {cell}\n")
+        out.append("| step | compute s | memory s | collective s | dominant | useful |")
+        out.append("|---|---|---|---|---|---|")
+        for e in data[cell]:
+            uf = e.get("useful_flops_fraction") or 0
+            out.append(
+                f"| {e['step']} | {e['compute_s']:.3f} | {e['memory_s']:.3f} "
+                f"| {e['collective_s']:.3f} | {e['dominant']} | {uf:.3f} |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    print("## Dry-run table\n")
+    try:
+        print(dryrun_table())
+    except FileNotFoundError:
+        print("(results/dryrun.json missing — run repro.launch.dryrun)")
+    print("\n## Roofline table\n")
+    try:
+        print(roofline_table())
+    except FileNotFoundError:
+        print("(results/roofline.json missing — run repro.launch.roofline_run)")
+    print("\n## Perf iterations (hillclimb)\n")
+    try:
+        print(perf_table())
+    except FileNotFoundError:
+        print("(results/perf_iterations.json missing — run repro.launch.hillclimb)")
+
+
+if __name__ == "__main__":
+    main()

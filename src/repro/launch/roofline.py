@@ -1,0 +1,165 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape) on the single-pod mesh, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device / 197e12          [s]
+    memory     = HLO_bytes_per_device / 819e9           [s]
+    collective = wire_bytes_per_device / 50e9            [s]
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes;
+``compiled.as_text()`` (post-SPMD HLO) for collective ops. Two measured
+caveats, both handled here:
+
+1. XLA's cost analysis and the HLO text count a ``while`` body ONCE, not
+   per trip (verified empirically) — so per-cell terms are derived from
+   UNROLLED lowerings of 1-stage and 2-stage configs:
+       per_stage = X(2 stages) - X(1 stage)
+       total     = X(1 stage) + per_stage * (n_stages - 1)
+   which is exact because body stages are identical.
+2. Wire bytes per collective use ring-algorithm estimates:
+   all-reduce 2x, all-gather/reduce-scatter/all-to-all/permute 1x the
+   largest operand (the (n-1)/n factor is ~1 at n=16..512).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import jax
+
+PEAK_FLOPS = 197e12   # bf16 / chip (TPU v5e)
+HBM_BW = 819e9        # B/s / chip
+LINK_BW = 50e9        # B/s / chip ICI
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _line_max_bytes(line: str) -> int:
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(line):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
+def collective_bytes_from_text(text: str) -> Dict[str, float]:
+    """Per-collective-kind wire-byte estimate from post-SPMD HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match op invocations (e.g. "all-reduce(", "all-gather-start(")
+            if f"{kind}(" in stripped or f"{kind}-start(" in stripped:
+                size = _line_max_bytes(stripped)
+                mult = 2.0 if kind == "all-reduce" else 1.0
+                out[kind] += mult * size
+                counts[kind] += 1
+                break
+    out["total_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        if self.model_flops and self.flops_per_device:
+            return self.model_flops / self.flops_per_device
+        return None
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops_per_device": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+        }
+
+
+def roofline_terms(flops: float, bytes_: float, wire_bytes: float,
+                   model_flops: float = 0.0) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=wire_bytes / LINK_BW,
+        flops_per_device=flops,
+        bytes_per_device=bytes_,
+        wire_bytes_per_device=wire_bytes,
+        model_flops=model_flops,
+    )
+
+
+def analyze_unrolled(cfg, mesh, shape_name, shapes, bundle_cls):
+    """Exact per-cell terms via the 1-stage/2-stage unrolled differencing."""
+    import dataclasses as dc
+
+    from ..models.transformer import split_pattern, unrolled_stages
+
+    prefix, n_stages = split_pattern(cfg)
+    unit = len(cfg.pattern_unit)
+
+    def measure(n_layers_small: int) -> Dict[str, float]:
+        small = dc.replace(cfg, name=cfg.name, n_layers=n_layers_small)
+        bundle = bundle_cls(small, mesh)
+        with unrolled_stages():
+            compiled = bundle.lower(shape_name, shapes).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes_from_text(compiled.as_text())
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire": float(coll["total_bytes"]),
+        }
+
+    n1 = len(prefix) + unit
+    n2 = len(prefix) + 2 * unit
+    m1 = measure(n1)
+    m2 = measure(n2)
+    total = {
+        k: m1[k] + (m2[k] - m1[k]) * (n_stages - 1) for k in m1
+    }
+    return total, m1, m2

@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Roofline driver (deliverable g): per (arch x shape) on the single-pod
+mesh, derive the three roofline terms from UNROLLED 1-stage/2-stage
+lowerings (launch/roofline.py) plus MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) per device, and write results/roofline.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline_run --arch X --shape Y
+  PYTHONPATH=src python -m repro.launch.roofline_run --all [--skip-done]
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from ..configs import ARCHS, SHAPES, cells, get_config
+from .mesh import make_production_mesh
+from .roofline import analyze_unrolled, roofline_terms
+from .steps import StepBundle
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "roofline.json"
+
+
+def model_flops_per_device(cfg, shape_name, n_devices: int) -> float:
+    """6*N*D useful-FLOPs accounting (N_active for MoE), per device."""
+    seq, batch, kind = SHAPES[shape_name]
+    n = cfg.n_active_params if cfg.moe is not None else cfg.n_params
+    if kind == "train":
+        tokens = seq * batch          # fwd+bwd: 6 N D
+        factor = 6.0
+    elif kind == "prefill":
+        tokens = seq * batch          # fwd only: 2 N D
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = batch
+        factor = 2.0
+    return factor * n * tokens / n_devices
+
+
+def run_cell(arch: str, shape: str, verbose=True):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    total, m1, m2 = analyze_unrolled(cfg, mesh, shape, SHAPES, StepBundle)
+    mf = model_flops_per_device(cfg, shape, mesh.devices.size)
+    terms = roofline_terms(total["flops"], total["bytes"], total["wire"],
+                           model_flops=mf)
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "analysis_s": round(time.time() - t0, 1),
+        **terms.as_dict(),
+        "one_stage": m1,
+        "two_stage": m2,
+    }
+    if verbose:
+        print(json.dumps(record, indent=2))
+    return record
+
+
+def save(record):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    data = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+    data[f'{record["arch"]}|{record["shape"]}'] = record
+    RESULTS.write_text(json.dumps(data, indent=1, sort_keys=True))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    done = set(json.loads(RESULTS.read_text())) if (
+        args.skip_done and RESULTS.exists()) else set()
+
+    archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
+    failures = []
+    for arch in archs:
+        shapes = cells(get_config(arch)) if args.all or not args.shape else [args.shape]
+        for shape in shapes:
+            if f"{arch}|{shape}" in done:
+                continue
+            print(f"=== {arch} x {shape}", flush=True)
+            try:
+                rec = run_cell(arch, shape, verbose=False)
+                save(rec)
+                print(f"    dominant={rec['dominant']} "
+                      f"compute={rec['compute_s']:.4f}s "
+                      f"memory={rec['memory_s']:.4f}s "
+                      f"collective={rec['collective_s']:.4f}s "
+                      f"useful={rec['useful_flops_fraction']}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                print(f"    FAIL {e!r}", flush=True)
+    if failures:
+        print(f"{len(failures)} failures")
+        for f in failures:
+            print(" ", f[0], f[1], f[2][:160])
+
+
+if __name__ == "__main__":
+    main()

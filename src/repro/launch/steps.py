@@ -1,0 +1,172 @@
+"""Step builders shared by the dry-run, the trainer, and the server:
+given (arch config, mesh) produce the jittable step functions plus the
+ShapeDtypeStruct input stand-ins and sharding trees for every assigned
+input shape. No device allocation happens here (dry-run requirement)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import (
+    decode_step as model_decode,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill as model_prefill,
+)
+from ..models.config import ArchConfig
+from ..models.layers import DTYPES
+from ..models.transformer import FRONTEND_DIMS
+from ..optim import adamw_init, adamw_update, clip_by_global_norm, opt_specs
+from ..parallel import batch_specs, cache_specs, param_specs, policy_for, use_policy
+
+__all__ = ["StepBundle", "build_bundle", "input_specs"]
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, shapes: Dict[str, Tuple[int, int, str]],
+                *, batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    seq, batch, kind = shapes[shape_name]
+    if batch_override:
+        batch = batch_override
+    dtype = DTYPES[cfg.dtype]
+    if cfg.frontend:
+        tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)  # labels/audio ids
+        inp = jax.ShapeDtypeStruct(
+            (batch, seq, FRONTEND_DIMS[cfg.frontend]), dtype
+        )
+    else:
+        inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        tok = inp
+    if kind == "train":
+        return {"inputs": inp, "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if kind == "prefill":
+        cache = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+        return {"inputs": inp, "cache": cache}
+    if kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+        one = (
+            jax.ShapeDtypeStruct((batch, 1, FRONTEND_DIMS[cfg.frontend]), dtype)
+            if cfg.frontend else jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        )
+        return {"inputs": one, "cache": cache,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(kind)
+
+
+class StepBundle:
+    """Jittable steps + sharding trees for one (arch, mesh)."""
+
+    def __init__(self, cfg: ArchConfig, mesh: jax.sharding.Mesh,
+                 lr: float = 3e-4, clip: float = 1.0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.policy = policy_for(cfg, mesh)
+        tp = self.policy.tp_size
+        self.param_shapes = jax.eval_shape(
+            lambda k: init_params(cfg, k, tp_size=tp), jax.random.PRNGKey(0)
+        )
+        self.pspecs = param_specs(self.param_shapes, self.policy)
+        self.opt_shapes = jax.eval_shape(adamw_init, self.param_shapes)
+        dp_size = int(np.prod([
+            mesh.devices.shape[i] for i, a in enumerate(mesh.axis_names)
+            if a != "model"
+        ]))
+        self.ospecs = opt_specs(self.pspecs, self.policy.dp, dp_size,
+                                self.opt_shapes["master"])
+        self.lr = lr
+        self.clip = clip
+
+    def sharding(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    # -- steps ---------------------------------------------------------------
+    def train_step(self, params, opt_state, inputs, labels):
+        cfg = self.cfg
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, inputs, labels)
+        )(params)
+        grads, gnorm = clip_by_global_norm(grads, self.clip)
+        new_params, new_opt = adamw_update(
+            params, grads, opt_state, jnp.asarray(self.lr, jnp.float32)
+        )
+        return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+
+    def prefill_step(self, params, inputs, cache):
+        return model_prefill(params, self.cfg, inputs, cache)
+
+    def decode_step(self, params, inputs, cache, pos):
+        return model_decode(params, self.cfg, inputs, cache, pos)
+
+    # -- lowering ------------------------------------------------------------
+    def lower(self, shape_name: str, shapes, *, batch_override=None,
+              donate: bool = True):
+        """Lower the cell's step with full sharding trees. Returns Lowered."""
+        cfg = self.cfg
+        specs = input_specs(cfg, shape_name, shapes, batch_override=batch_override)
+        kind = shapes[shape_name][2]
+        batch = specs["inputs"].shape[0]
+        # per-cell policy: long_500k's batch=1 cannot shard over dp
+        pol = policy_for(cfg, self.mesh, batch=batch)
+        dp = pol.dp if pol.batch_shardable else ()
+        in_spec = P(dp, None, None) if cfg.frontend else P(dp, None)
+
+        with use_policy(pol):
+            if kind == "train":
+                fn = jax.jit(
+                    self.train_step,
+                    in_shardings=(
+                        self.sharding(self.pspecs), self.sharding(self.ospecs),
+                        NamedSharding(self.mesh, in_spec),
+                        NamedSharding(self.mesh, P(dp, None)),
+                    ),
+                    out_shardings=(
+                        self.sharding(self.pspecs), self.sharding(self.ospecs),
+                        None,
+                    ),
+                    donate_argnums=(0, 1) if donate else (),
+                )
+                return fn.lower(self.param_shapes, self.opt_shapes,
+                                specs["inputs"], specs["labels"])
+            cspecs = cache_specs(cfg, pol)
+            if kind == "prefill":
+                fn = jax.jit(
+                    self.prefill_step,
+                    in_shardings=(
+                        self.sharding(self.pspecs),
+                        NamedSharding(self.mesh, in_spec),
+                        self.sharding(cspecs),
+                    ),
+                    out_shardings=(None, self.sharding(cspecs)),
+                    donate_argnums=(2,) if donate else (),
+                )
+                return fn.lower(self.param_shapes, specs["inputs"], specs["cache"])
+            fn = jax.jit(
+                self.decode_step,
+                in_shardings=(
+                    self.sharding(self.pspecs),
+                    NamedSharding(self.mesh, in_spec),
+                    self.sharding(cspecs),
+                    NamedSharding(self.mesh, P()),
+                ),
+                out_shardings=(None, self.sharding(cspecs)),
+                donate_argnums=(2,) if donate else (),
+            )
+            return fn.lower(self.param_shapes, specs["inputs"],
+                            specs["cache"], specs["pos"])

@@ -1,0 +1,19 @@
+"""LM model stack for the 10 assigned architectures (DESIGN.md §3)."""
+
+from .config import ArchConfig, MLAConfig, MoEConfig
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    pad_vocab,
+    prefill,
+    split_pattern,
+)
+
+__all__ = [
+    "ArchConfig", "MLAConfig", "MoEConfig",
+    "decode_step", "forward", "init_cache", "init_params", "loss_fn",
+    "pad_vocab", "prefill", "split_pattern",
+]

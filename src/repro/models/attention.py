@@ -1,0 +1,236 @@
+"""Attention mixers: GQA (global / sliding-window / softcap / prefix-LM)
+and DeepSeek-style MLA (multi-head latent attention with compressed KV).
+
+All tensors follow [B, S, D] activations; attention internal layout is
+[B, H, S, hd]. Caches (serving) are functional: ``(k, v)`` or MLA's
+``(c_kv, k_rope)`` updated via dynamic_update_slice at ``pos``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..parallel import shard
+from .config import ArchConfig
+from .layers import apply_rope, dense_init, rope
+
+__all__ = ["init_attn", "apply_attn", "init_mla", "apply_mla"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    h_real, kv_real = cfg.n_heads, cfg.n_kv_heads
+    h, hkv = cfg.eff_heads, cfg.eff_kv_heads
+    ks = jax.random.split(key, 4)
+    wq_r = dense_init(ks[0], (d, h_real, hd), dtype)
+    wk_r = dense_init(ks[1], (d, kv_real, hd), dtype)
+    wv_r = dense_init(ks[2], (d, kv_real, hd), dtype)
+    wo_r = dense_init(ks[3], (h_real * hd, d), dtype)
+    if h == h_real:
+        return {"wq": wq_r, "wk": wk_r, "wv": wv_r, "wo": wo_r}
+
+    # Head padding (pad_heads_to): real q head (g, r) keeps its kv group —
+    # it moves to slot g*group_pad + r; padded slots hold zero queries AND
+    # zero wo rows, so numerics are exactly unchanged.
+    group = h_real // kv_real
+    group_pad = h // hkv
+    idx = jnp.asarray(
+        [(i // group) * group_pad + (i % group) for i in range(h_real)],
+        jnp.int32,
+    )
+    wq = jnp.zeros((d, h, hd), dtype).at[:, idx].set(wq_r)
+    wo = jnp.zeros((h, hd, d), dtype).at[idx].set(
+        wo_r.reshape(h_real, hd, d)
+    ).reshape(h * hd, d)
+    if hkv != kv_real:  # MHA: kv heads pad alongside (group_pad == 1)
+        kv_idx = idx
+        wk = jnp.zeros((d, hkv, hd), dtype).at[:, kv_idx].set(wk_r)
+        wv = jnp.zeros((d, hkv, hd), dtype).at[:, kv_idx].set(wv_r)
+    else:
+        wk, wv = wk_r, wv_r
+    return {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+
+
+def apply_attn(
+    p: Dict[str, Any],
+    x: jax.Array,                       # [B, S, D]
+    cfg: ArchConfig,
+    *,
+    local: bool,
+    positions: jax.Array,               # [S] global positions of x
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # k, v [B, Hkv, Sc, hd]
+    pos: Optional[jax.Array] = None,    # scalar write offset into the cache
+    prefill: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.eff_heads, cfg.eff_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+
+    cos, sin = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard(q, "heads")
+    k = shard(k, "kv_heads")
+    v = shard(v, "kv_heads")
+
+    window = cfg.window if local else None
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ring = window is not None and ck.shape[2] <= window
+        if ring:
+            # ring-buffer window cache: keep only the trailing buffer rows
+            rows = ck.shape[2]
+            ck = jnp.concatenate([ck, k], axis=2)[:, :, -rows:]
+            cv = jnp.concatenate([cv, v], axis=2)[:, :, -rows:]
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, pos, 0))
+        ck = shard(ck, "kv_cache")
+        cv = shard(cv, "kv_cache")
+        new_cache = (ck, cv)
+
+    if cache is None or prefill:
+        # attention within the current segment (training, or prefill where
+        # the cache starts empty and all context is in this call)
+        out = ops.attention(
+            q, k, v, causal=True, window=window, softcap=cfg.attn_softcap,
+            prefix_len=cfg.prefix_len,
+        )
+    else:
+        ck, cv = new_cache
+        if window is not None and ck.shape[2] <= window:
+            q_offset = ck.shape[2] - s       # query at the buffer tail
+            min_col = ck.shape[2] - s - pos  # mask unwritten warmup rows
+        else:
+            q_offset = pos
+            min_col = None
+        out = _cached_attention(
+            q, ck, cv, q_offset=q_offset, window=window,
+            softcap=cfg.attn_softcap, prefix_len=cfg.prefix_len,
+            min_col=min_col,
+        )
+
+    out = shard(out, "heads")
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    y = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+    return shard(y, "act_btd"), new_cache
+
+
+def _cached_attention(q, k, v, *, q_offset, window, softcap, prefix_len,
+                      min_col=None):
+    """Attention against a cache where ``q_offset`` may be a traced scalar.
+
+    The kernels take static offsets; for decode we mask with the dynamic
+    position instead: mask = cols <= q_offset + row_index.
+    """
+    b, h, sq, hd = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(b, hkv, group, sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkld->bkgql", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = q_offset + jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    if prefix_len:
+        mask |= cols < prefix_len
+    if min_col is not None:
+        mask &= cols >= min_col
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgql,bkld->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank compressed KV; cache is (c_kv, k_rope)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qd = m.nope_head_dim + m.rope_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora, h, qd), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora + m.rope_dim), dtype),
+        "wkv_b": dense_init(ks[3], (m.kv_lora, h, m.nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def apply_mla(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # c_kv [B,Sc,kv_lora], k_rope [B,Sc,rope]
+    pos: Optional[jax.Array] = None,
+    prefill: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = jnp.einsum("bsr,rhk->bhsk", q, p["wq_b"])  # [B, H, S, nope+rope]
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope_new = kv_a[..., : m.kv_lora], kv_a[..., m.kv_lora :]
+
+    cos, sin = rope(positions, m.rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_new = apply_rope(k_rope_new[:, None], cos, sin)[:, 0]  # [B, S, rope]
+
+    new_cache = None
+    if cache is not None:
+        cc, cr = cache
+        cc = jax.lax.dynamic_update_slice(cc, c_kv, (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope_new, (0, pos, 0))
+        new_cache = (cc, cr)
+
+    if cache is None or prefill:
+        c_all, r_all, q_offset = c_kv, k_rope_new, None  # local segment
+    else:
+        c_all, r_all = new_cache
+        q_offset = pos
+
+    # reconstruct per-head keys/values from the latent representation
+    kv = jnp.einsum("bsr,rhk->bhsk", c_all, p["wkv_b"])
+    k_nope, v = kv[..., : m.nope_head_dim], kv[..., m.nope_head_dim :]
+    k_rope_b = jnp.broadcast_to(r_all[:, None], (b, h) + r_all.shape[1:])
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q_full = shard(q_full, "heads")
+    k_full = shard(k_full, "heads")
+    v = shard(v, "heads")
+
+    if q_offset is None:
+        out = ops.attention(q_full, k_full, v, causal=True)
+    else:
+        out = _cached_attention(q_full, k_full, v, q_offset=q_offset,
+                                window=None, softcap=None, prefix_len=0)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    y = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+    return shard(y, "act_btd"), new_cache

@@ -1,0 +1,118 @@
+"""FFN sublayers: gated dense MLP and Mixture-of-Experts.
+
+MoE uses capacity-based expert-choice dispatch over the token-choice top-k
+assignment (DESIGN.md §6): router computes top-k per token; each expert
+then takes its top-C assigned rows (C = tokens*k/E * capacity_factor).
+This keeps every shape static, vectorizes over the (TP-sharded) expert
+axis, and its FLOPs equal the true active compute x capacity_factor — no
+dense-over-experts blowup. Overflowed assignments are dropped (standard
+capacity semantics); the expert axis is padded so E % TP == 0 (padded
+experts get -inf router logits and thus no real tokens).
+
+This is also where ACS meets the LM stack: each (expert, token-group) GEMM
+is a paper-style small kernel; the wave executor path (`moe_task_stream`)
+emits them as ACS tasks so the scheduling benchmarks can run real MoE
+streams, while the jit path below is the production train/serve compute.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import shard
+from .config import ArchConfig
+from .layers import dense_init
+
+__all__ = ["init_ffn", "apply_ffn", "init_moe", "apply_moe", "padded_experts"]
+
+
+def init_ffn(key, d: int, ff: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dtype),
+        "w_up": dense_init(ks[1], (d, ff), dtype),
+        "w_down": dense_init(ks[2], (ff, d), dtype),
+    }
+
+
+def apply_ffn(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = shard(h, "ffn_hidden")
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["w_down"]), "act_btd")
+
+
+def padded_experts(cfg: ArchConfig, tp_size: int = 16) -> int:
+    e = cfg.moe.n_experts
+    return -(-e // tp_size) * tp_size
+
+
+def init_moe(key, cfg: ArchConfig, dtype, tp_size: int = 16) -> Dict[str, Any]:
+    m = cfg.moe
+    d, de = cfg.d_model, m.d_expert
+    e_pad = padded_experts(cfg, tp_size)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, m.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (e_pad, d, de), dtype),
+        "w_up": dense_init(ks[2], (e_pad, d, de), dtype),
+        "w_down": dense_init(ks[3], (e_pad, de, d), dtype),
+    }
+    if m.n_shared:
+        params["shared"] = init_ffn(ks[4], d, m.n_shared * de, dtype)
+    return params
+
+
+def apply_moe(p: Dict[str, Any], x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x [B, S, D] -> [B, S, D].
+
+    Dispatch happens within ``g = moe.dispatch_groups`` batch-aligned token
+    groups (g=1 -> one global group). With g = DP degree, the group axis
+    aligns with the batch sharding, so routing/gather/expert-compute/
+    combine are all shard-local and only the final combine psum crosses
+    the TP axis (EXPERIMENTS.md §Perf, profile-driven).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = m.n_experts
+    e_pad = p["w_gate"].shape[0]
+    k = m.top_k
+    g = max(1, min(m.dispatch_groups, b))
+    tg = t // g
+    cap = max(int(tg * k / e * m.capacity_factor), 1)
+    cap = min(cap, tg)
+
+    cdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[m.combine_dtype]
+    xg = x.reshape(g, tg, d)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # [G, Tg, E]
+    top_p, top_e = jax.lax.top_k(probs, k)   # [G, Tg, k]
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+
+    def one_group(xf, tp_g, te_g):
+        """Dispatch/compute/combine for one token group [Tg, D] — vmapped
+        over G so every gather/scatter carries an explicit batch dim
+        (GSPMD shards those; raw multi-index gathers it does not)."""
+        assign = jnp.zeros((tg, e_pad), jnp.float32)
+        assign = assign.at[jnp.arange(tg)[:, None], te_g].set(tp_g)
+        scores_et = assign.T                                  # [E_pad, Tg]
+        top_scores, token_idx = jax.lax.top_k(scores_et, cap)  # [E_pad, C]
+        valid = top_scores > 0.0
+        xe = xf[token_idx]                                    # [E_pad, C, D]
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # [E_pad, C, D]
+        ye = (ye * (top_scores * valid)[..., None].astype(ye.dtype)).astype(cdt)
+        out_g = jnp.zeros((tg, d), cdt)
+        return out_g.at[token_idx.reshape(-1)].add(ye.reshape(-1, d))
+
+    out = jax.vmap(one_group)(xg, top_p, top_e)              # [G, Tg, D]
+    out = shard(out.reshape(b, s, d), "act_btd").astype(x.dtype)
+
+    if "shared" in p:
+        out = out + apply_ffn(p["shared"], x)
+    return out

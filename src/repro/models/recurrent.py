@@ -1,0 +1,161 @@
+"""Recurrent mixers: RG-LRU (recurrentgemma) and Mamba-1 selective SSM
+(falcon-mamba). Both reduce to the diagonal linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` served by ``kernels.lru_scan`` (RG-LRU
+directly; Mamba's per-(channel, state) recurrence via a compact lax.scan
+whose carry never materializes [B, S, d_inner, N] — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..parallel import shard
+from .config import ArchConfig
+from .layers import dense_init
+
+__all__ = ["init_rglru", "apply_rglru", "init_mamba", "apply_mamba"]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (recurrentgemma): conv1d + gated diagonal LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype),       # x branch
+        "w_gate_in": dense_init(ks[1], (d, w), dtype),  # multiplicative branch
+        "conv_w": dense_init(ks[2], (cfg.d_conv, w), dtype, scale=0.5),
+        "wr": dense_init(ks[3], (w, w), dtype),         # recurrence gate
+        "wi": dense_init(ks[4], (w, w), dtype),         # input gate
+        "a_log": (-0.5 * jnp.ones((w,), jnp.float32)).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """x [B, S, W]; w [K, W] depthwise causal conv. Returns (y, new_state)
+    where state is the trailing K-1 inputs (for decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, W]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return y.astype(x.dtype), new_state
+
+
+def apply_rglru(
+    p: Dict[str, Any],
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    *,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (h [B,W], conv [B,K-1,W])
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    g = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
+    u = shard(u, "channels")
+
+    conv_state = state[1] if state is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv_w"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["wr"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["wi"]))
+    log_a = -8.0 * r * jax.nn.softplus(p["a_log"])[None, None, :]
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = (i * u).astype(jnp.float32)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * gated
+
+    h0 = state[0].astype(jnp.float32) if state is not None else jnp.zeros((b, u.shape[-1]), jnp.float32)
+    hs = ops.lru_scan(a, bterm, h0)  # [B, S, W]
+    hs = shard(hs.astype(x.dtype), "channels")
+
+    y = jnp.einsum("bsw,wd->bsd", hs * g, p["w_out"])
+    new_state = (hs[:, -1].astype(jnp.float32), new_conv) if state is not None else None
+    return shard(y, "act_btd"), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.expand * d
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, di), dtype, scale=0.5),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * n), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def apply_mamba(
+    p: Dict[str, Any],
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    *,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (h [B,di,N], conv [B,K-1,di])
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    di = cfg.expand * d
+    n = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = shard(xi, "channels")
+
+    conv_state = state[1] if state is not None else None
+    xi, new_conv = _causal_conv1d(xi, p["conv_w"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = jnp.einsum("bse,ef->bsf", xi, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", proj[..., :dt_rank], p["dt_proj"])
+        + p["dt_bias"][None, None]
+    ).astype(jnp.float32)                                  # [B, S, di]
+    bmat = proj[..., dt_rank : dt_rank + n].astype(jnp.float32)   # [B, S, N]
+    cmat = proj[..., dt_rank + n :].astype(jnp.float32)           # [B, S, N]
+    a = -jnp.exp(p["A_log"])                                # [di, N]
+
+    h0 = state[0].astype(jnp.float32) if state is not None else jnp.zeros((b, di, n), jnp.float32)
+    xf = xi.astype(jnp.float32)
+
+    def step(h, inputs):
+        dt_t, b_t, c_t, x_t = inputs  # [B,di], [B,N], [B,N], [B,di]
+        da = jnp.exp(dt_t[..., None] * a[None])             # [B, di, N]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, c_t)                # [B, di]
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (dt.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+         cmat.transpose(1, 0, 2), xf.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2) + p["D"][None, None] * xf     # [B, S, di]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, "channels")
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = (hT, new_conv) if state is not None else None
+    return shard(out, "act_btd"), new_state

@@ -1,0 +1,355 @@
+"""Model assembly: embedding/frontend -> (prefix layers + scanned stages)
+-> final norm -> LM head. One code path serves all 10 assigned archs.
+
+Layer layout: ``cfg.pattern`` (length n_layers) is split into an unscanned
+*prefix* (pattern remainder + MoE ``first_dense`` layers) and a body of
+``n_stages`` repetitions of ``pattern_unit`` executed with ``lax.scan``
+over stacked params — this keeps the HLO compact for 46-88 layer configs
+(compile time and dry-run tractability) while supporting heterogeneous
+units (gemma2 local/global pairs, recurrentgemma's 2:1 RG-LRU:attn).
+
+Modes:
+* ``forward``      — training forward (no cache) -> logits [B, S, V_pad]
+* ``prefill``      — forward + cache population -> (last logits, cache)
+* ``decode_step``  — one token against the cache -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import shard
+from .attention import apply_attn, apply_mla, init_attn, init_mla
+from .config import ATTN_GLOBAL, ATTN_LOCAL, MAMBA, MLA, RGLRU, ArchConfig
+from .ffn import apply_ffn, apply_moe, init_ffn, init_moe
+from .layers import DTYPES, dense_init, rms_norm
+from .recurrent import apply_mamba, apply_rglru, init_mamba, init_rglru
+
+__all__ = [
+    "FRONTEND_DIMS", "pad_vocab", "split_pattern", "init_params",
+    "forward", "loss_fn", "prefill", "decode_step", "init_cache",
+    "unrolled_stages",
+]
+
+FRONTEND_DIMS = {"audio_stub": 512, "vision_stub": 1152}
+
+# When True, the stage loop is a python loop instead of lax.scan. Used by
+# the roofline analyzer: XLA's cost analysis counts a while body ONCE
+# (verified empirically), so exact per-stage FLOPs/bytes/collective counts
+# come from unrolled 1-stage vs 2-stage lowerings (launch/roofline.py).
+_UNROLL = False
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def unrolled_stages():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+# Remat policy for the per-stage checkpoint (§Perf knob): "nothing" (full
+# recompute, minimum memory) or "dots" (save matmul outputs — skips the
+# recompute of the big GEMMs *and their surrounding collectives* in bwd).
+_REMAT_POLICY = "nothing"
+
+
+@contextlib.contextmanager
+def remat_policy(name: str):
+    global _REMAT_POLICY
+    prev = _REMAT_POLICY
+    _REMAT_POLICY = name
+    try:
+        yield
+    finally:
+        _REMAT_POLICY = prev
+
+
+def _checkpoint_policy():
+    if _REMAT_POLICY == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple
+
+
+def split_pattern(cfg: ArchConfig) -> Tuple[Tuple[str, ...], int]:
+    """Returns (prefix_kinds, n_stages). Body = n_stages x pattern_unit."""
+    unit = cfg.pattern_unit
+    n_prefix = cfg.n_layers % len(unit)
+    if cfg.moe is not None and cfg.moe.first_dense:
+        fd = cfg.moe.first_dense
+        # prefix must absorb the dense-FFN layers and keep body divisible
+        while (cfg.n_layers - max(n_prefix, fd)) % len(unit):
+            fd += 1
+        n_prefix = max(n_prefix, fd)
+    prefix = cfg.pattern[:n_prefix]
+    n_stages = (cfg.n_layers - n_prefix) // len(unit)
+    return prefix, n_stages
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, kind: str, cfg: ArchConfig, dtype, layer_has_moe: bool,
+                tp_size: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm": jnp.zeros((d,), jnp.float32)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["mixer"] = init_attn(k1, cfg, dtype)
+    elif kind == MLA:
+        p["mixer"] = init_mla(k1, cfg, dtype)
+    elif kind == RGLRU:
+        p["mixer"] = init_rglru(k1, cfg, dtype)
+    elif kind == MAMBA:
+        p["mixer"] = init_mamba(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != MAMBA:
+        p["ffn_norm"] = jnp.zeros((d,), jnp.float32)
+        if layer_has_moe:
+            p["ffn"] = init_moe(k2, cfg, dtype, tp_size)
+        else:
+            p["ffn"] = init_ffn(k2, d, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, tp_size: int = 16) -> Dict[str, Any]:
+    dtype = DTYPES[cfg.dtype]
+    d = cfg.d_model
+    v_pad = pad_vocab(cfg.vocab)
+    prefix, n_stages = split_pattern(cfg)
+    ks = jax.random.split(key, 4 + len(prefix))
+
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], (v_pad, d), dtype),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(
+            ks[1], (FRONTEND_DIMS[cfg.frontend], d), dtype
+        )
+    if not cfg.tied_embeddings:
+        params["head"] = dense_init(ks[2], (d, v_pad), dtype)
+
+    moe_layer = cfg.moe is not None
+    params["prefix"] = [
+        _init_layer(ks[4 + i], kind, cfg, dtype, layer_has_moe=False, tp_size=tp_size)
+        for i, kind in enumerate(prefix)
+    ]
+
+    unit = cfg.pattern_unit
+    stage_keys = jax.random.split(ks[3], max(n_stages, 1))
+
+    def init_stage(sk):
+        uks = jax.random.split(sk, len(unit))
+        return tuple(
+            _init_layer(uks[i], kind, cfg, dtype, layer_has_moe=moe_layer,
+                        tp_size=tp_size)
+            for i, kind in enumerate(unit)
+        )
+
+    if n_stages > 0:
+        params["stages"] = jax.vmap(init_stage)(stage_keys)
+    else:
+        params["stages"] = None
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(kind: str, cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        rows = max_len
+        if kind == ATTN_LOCAL and cfg.window is not None:
+            rows = min(cfg.window, max_len)
+        shape = (batch, cfg.eff_kv_heads, rows, cfg.head_dim)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if kind == MLA:
+        m = cfg.mla
+        return (
+            jnp.zeros((batch, max_len, m.kv_lora), dtype),
+            jnp.zeros((batch, max_len, m.rope_dim), dtype),
+        )
+    if kind == RGLRU:
+        w = cfg.rglru_width or cfg.d_model
+        return (
+            jnp.zeros((batch, w), jnp.float32),
+            jnp.zeros((batch, cfg.d_conv - 1, w), dtype),
+        )
+    if kind == MAMBA:
+        di = cfg.expand * cfg.d_model
+        return (
+            jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+            jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        )
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dtype = DTYPES[cfg.dtype]
+    prefix, n_stages = split_pattern(cfg)
+    pre = [_layer_cache(k, cfg, batch, max_len, dtype) for k in prefix]
+    if n_stages > 0:
+        def one_stage(_):
+            return tuple(
+                _layer_cache(k, cfg, batch, max_len, dtype) for k in cfg.pattern_unit
+            )
+        stages = jax.vmap(one_stage)(jnp.arange(n_stages))
+    else:
+        stages = None
+    return {"prefix": pre, "stages": stages}
+
+
+# ---------------------------------------------------------------------------
+# forward paths
+# ---------------------------------------------------------------------------
+
+def _apply_layer(kind, lp, x, cfg, positions, cache_entry, pos, prefill_mode):
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        y, new_c = apply_attn(
+            lp["mixer"], h, cfg, local=(kind == ATTN_LOCAL),
+            positions=positions, cache=cache_entry, pos=pos,
+            prefill=prefill_mode,
+        )
+    elif kind == MLA:
+        y, new_c = apply_mla(lp["mixer"], h, cfg, positions=positions,
+                             cache=cache_entry, pos=pos, prefill=prefill_mode)
+    elif kind == RGLRU:
+        y, new_c = apply_rglru(lp["mixer"], h, cfg, state=cache_entry)
+    elif kind == MAMBA:
+        y, new_c = apply_mamba(lp["mixer"], h, cfg, state=cache_entry)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "ffn" in lp:
+        h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None and "router" in lp["ffn"]:
+            x = x + apply_moe(lp["ffn"], h, cfg)
+        else:
+            x = x + apply_ffn(lp["ffn"], h)
+    return x, new_c
+
+
+def _embed(params, cfg: ArchConfig, inputs):
+    if cfg.frontend:
+        x = jnp.einsum("bsf,fd->bsd", inputs, params["frontend_proj"])
+    else:
+        x = params["embed"][inputs]
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return shard(x.astype(DTYPES[cfg.dtype]), "act_btd")
+
+
+def _head(params, cfg: ArchConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tied_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return shard(logits, "logits")
+
+
+def _run_layers(params, cfg, x, positions, cache, pos, prefill_mode, remat):
+    prefix, n_stages = split_pattern(cfg)
+    unit = cfg.pattern_unit
+    new_prefix_cache = []
+    for i, kind in enumerate(prefix):
+        entry = cache["prefix"][i] if cache is not None else None
+        x, nc = _apply_layer(kind, params["prefix"][i], x, cfg, positions,
+                             entry, pos, prefill_mode)
+        new_prefix_cache.append(nc)
+
+    new_stage_cache = None
+    if n_stages > 0:
+        def stage_body(carry, xs):
+            xx = carry
+            stage_params, stage_cache = xs
+            new_entries = []
+            for ui, kind in enumerate(unit):
+                entry = stage_cache[ui] if stage_cache is not None else None
+                xx, nc = _apply_layer(kind, stage_params[ui], xx, cfg,
+                                      positions, entry, pos, prefill_mode)
+                new_entries.append(nc)
+            out_cache = tuple(new_entries) if stage_cache is not None else None
+            return xx, out_cache
+
+        body = stage_body
+        if remat:
+            body = jax.checkpoint(stage_body, policy=_checkpoint_policy())
+        stage_cache = cache["stages"] if cache is not None else None
+        xs = (params["stages"], stage_cache)
+        if _UNROLL:
+            outs = []
+            for si in range(n_stages):
+                xsi = jax.tree.map(lambda a: a[si], xs)
+                x, oc = body(x, xsi)
+                outs.append(oc)
+            new_stage_cache = (
+                jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+                if outs and outs[0] is not None else None
+            )
+        else:
+            x, new_stage_cache = jax.lax.scan(body, x, xs)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"prefix": new_prefix_cache, "stages": new_stage_cache}
+    return x, new_cache
+
+
+def forward(params, cfg: ArchConfig, inputs, *, remat: bool = True):
+    """Training/eval forward. inputs: tokens [B,S] int32 (or embeddings
+    [B,S,F] for frontend archs). Returns logits [B, S, V_pad] (f32)."""
+    b, s = inputs.shape[:2]
+    x = _embed(params, cfg, inputs)
+    positions = jnp.arange(s)
+    x, _ = _run_layers(params, cfg, x, positions, None, None, False, remat)
+    return _head(params, cfg, x)
+
+
+def loss_fn(params, cfg: ArchConfig, inputs, labels, *, remat: bool = True):
+    """Mean next-token cross entropy; padded vocab columns masked out."""
+    logits = forward(params, cfg, inputs, remat=remat)
+    v_pad = logits.shape[-1]
+    col = jnp.arange(v_pad)
+    logits = jnp.where(col[None, None] < cfg.vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def prefill(params, cfg: ArchConfig, inputs, cache):
+    """Populate the cache from a prompt; returns (last-token logits, cache)."""
+    b, s = inputs.shape[:2]
+    x = _embed(params, cfg, inputs)
+    positions = jnp.arange(s)
+    x, cache = _run_layers(params, cfg, x, positions, cache,
+                           jnp.asarray(0, jnp.int32), True, False)
+    return _head(params, cfg, x[:, -1:]), cache
+
+
+def decode_step(params, cfg: ArchConfig, inputs, cache, pos):
+    """One decode step at (traced) position ``pos``. inputs [B, 1]."""
+    x = _embed(params, cfg, inputs)
+    positions = pos + jnp.arange(inputs.shape[1])
+    x, cache = _run_layers(params, cfg, x, positions, cache, pos, False, False)
+    return _head(params, cfg, x), cache

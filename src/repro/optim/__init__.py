@@ -1,0 +1,13 @@
+"""Optimizer substrate: AdamW with fp32 master weights, LR schedules
+(cosine + MiniCPM's WSD), global-norm clipping, and error-feedback
+gradient compression for cross-pod data-parallel reduction."""
+
+from .adamw import adamw_init, adamw_update, clip_by_global_norm, opt_specs
+from .compression import ef_int8_compress, ef_int8_decompress, topk_compress
+from .schedules import cosine_schedule, wsd_schedule
+
+__all__ = [
+    "adamw_init", "adamw_update", "clip_by_global_norm", "opt_specs",
+    "cosine_schedule", "wsd_schedule",
+    "ef_int8_compress", "ef_int8_decompress", "topk_compress",
+]

@@ -1,0 +1,96 @@
+"""AdamW with fp32 master weights (bf16 compute params) and ZeRO-1-style
+optimizer-state sharding over the data axes (``opt_specs``)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm", "opt_specs"]
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    # explicit copy: when params are already f32 (smoke configs), astype
+    # aliases the same buffer, and donating params+opt together would
+    # donate one buffer twice.
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    sq = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0
+    )
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: Dict[str, Any],
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / c1, v / c2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * master)
+        return new_master, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_master = treedef.flatten_up_to(state["master"])
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(mu, g, m, v) for mu, g, m, v in zip(flat_master, flat_g, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype), new_master, params)
+    return new_params, {"step": step, "master": new_master, "m": new_m, "v": new_v}
+
+
+def opt_specs(
+    param_spec_tree: Any, dp: Tuple[str, ...], dp_size: int, shapes: Any
+) -> Dict[str, Any]:
+    """ZeRO-1: on top of the parameter's own TP sharding, shard master/m/v
+    over the data axes along the first unsharded, divisible dimension —
+    optimizer state is only needed shard-wise at the update."""
+
+    def zero1(spec: P, shape) -> P:
+        dims = tuple(shape.shape)
+        if not dims:
+            return P()
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        for i, d in enumerate(dims):
+            if entries[i] is None and dp_size > 0 and d % dp_size == 0:
+                entries[i] = dp
+                break
+        return P(*entries)
+
+    return {
+        "step": P(),
+        "master": jax.tree.map(zero1, param_spec_tree, shapes),
+        "m": jax.tree.map(zero1, param_spec_tree, shapes),
+        "v": jax.tree.map(zero1, param_spec_tree, shapes),
+    }

@@ -1,0 +1,55 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 2 pods x 256 chips, the pod axis crosses the slow inter-pod links; the
+standard mitigations are (a) error-feedback int8 quantization (~4x fewer
+bytes on the wire) and (b) top-k sparsification. Both are implemented as
+pure functions over gradient pytrees so the train loop can apply them
+around the pod-axis reduction; the error accumulator makes the compression
+unbiased over time (Karimireddy et al. — EF-SGD analysis applies to Adam's
+gradient input as used here).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_int8_compress", "ef_int8_decompress", "topk_compress"]
+
+
+def ef_int8_compress(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Returns (q_int8, scales, new_error). new_error = (g+e) - dequant(q)."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, g - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+        treedef.unflatten([o[2] for o in out]),
+    )
+
+
+def ef_int8_decompress(q: Any, scales: Any) -> Any:
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def topk_compress(grads: Any, frac: float = 0.01) -> Any:
+    """Keep the top-|frac| magnitude entries per tensor (zero the rest)."""
+
+    def one(g):
+        flat = jnp.abs(g.reshape(-1))
+        k = max(int(flat.shape[0] * frac), 1)
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+    return jax.tree.map(one, grads)

@@ -1,0 +1,34 @@
+"""LR schedules: cosine-with-warmup and MiniCPM's Warmup-Stable-Decay
+(WSD, arXiv:2404.06395 — the schedule minicpm-2b was trained with)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule"]
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor: float = 0.01):
+    """Warmup -> flat plateau -> exponential-ish decay tail (WSD)."""
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        tail = peak_lr * (floor ** t)
+        return jnp.where(
+            step < warmup, warm, jnp.where(step < warmup + stable, peak_lr, tail)
+        )
+
+    return lr

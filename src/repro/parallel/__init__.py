@@ -1,0 +1,10 @@
+"""Distribution layer: mesh axes, per-arch sharding policies, constraint
+helpers. See DESIGN.md §6."""
+
+from .axes import ShardingPolicy, current_policy, shard, use_policy
+from .sharding import batch_specs, cache_specs, param_specs, policy_for
+
+__all__ = [
+    "ShardingPolicy", "current_policy", "shard", "use_policy",
+    "param_specs", "batch_specs", "cache_specs", "policy_for",
+]

@@ -1,0 +1,98 @@
+"""Sharding context: model code expresses *semantic* constraints
+(``shard(x, "act_btd")``); the active :class:`ShardingPolicy` maps them to
+``PartitionSpec``s for the production mesh — or to no-ops when unset (CPU
+smoke tests run the exact same model code with no mesh at all).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "use_policy", "current_policy", "shard"]
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolved per-(arch, mesh) sharding decisions (DESIGN.md §6)."""
+
+    dp: Tuple[str, ...]          # data-parallel mesh axes, e.g. ("pod", "data")
+    tp: str = "model"            # tensor-parallel axis
+    shard_heads: bool = True     # H % tp_size == 0
+    shard_kv_heads: bool = True  # Hkv % tp_size == 0
+    shard_experts: bool = True   # (padded) E % tp_size == 0
+    seq_shard_attn: bool = False # fallback: shard attention over sequence
+    tp_size: int = 1
+    dp_size: int = 1
+    # False for cells whose global batch does not divide the dp axes
+    # (long_500k: batch=1): batch dims replicate and the dp axes are folded
+    # into the channel/sequence sharding instead.
+    batch_shardable: bool = True
+    mesh: Optional[jax.sharding.Mesh] = None  # required for constraints
+
+    # -- semantic specs -------------------------------------------------------
+    def spec(self, kind: str) -> Optional[P]:
+        tp = self.tp
+        dp = self.dp if self.batch_shardable else ()
+        # wide axis: fold the idle dp axes into tp when batch is unshardable
+        tpw = tp if self.batch_shardable else self.dp + (tp,)
+        table = {
+            # activations [B, S, D]
+            "act_btd": P(dp, None, None),
+            # ffn hidden [B, S, F] — F sharded over tp
+            "ffn_hidden": P(dp, None, tpw),
+            # logits [B, S, V] — vocab sharded
+            "logits": P(dp, None, tpw),
+            # attention tensors [B, H, S, hd]
+            "heads": P(dp, tp, None, None) if self.shard_heads
+                     else (P(dp, None, tp, None) if self.seq_shard_attn else P(dp, None, None, None)),
+            "kv_heads": P(dp, tp, None, None) if self.shard_kv_heads
+                        else (P(dp, None, tp, None) if self.seq_shard_attn else P(dp, None, None, None)),
+            # kv cache [B, Hkv, S, hd]
+            "kv_cache": P(dp, tp, None, None) if self.shard_kv_heads
+                        else P(dp, None, tpw, None),
+            # MoE dispatch [G, E, C, D] (G = batch-aligned dispatch groups)
+            "experts_gecd": P(dp, tp, None, None) if self.shard_experts else P(dp, None, None, None),
+            "experts_gec": P(dp, tp, None) if self.shard_experts else P(dp, None, None),
+            # recurrent channel tensors [B, S, W] — W sharded
+            "channels": P(dp, None, tpw),
+            # recurrent state [B, W]
+            "state_bw": P(dp, tpw),
+            # tokens [B, S]
+            "tokens": P(dp, None),
+        }
+        return table[kind]
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    prev = getattr(_TLS, "policy", None)
+    _TLS.policy = policy
+    try:
+        yield
+    finally:
+        _TLS.policy = prev
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return getattr(_TLS, "policy", None)
+
+
+def shard(x, kind: str):
+    """Apply the active policy's constraint for ``kind`` (no-op without one)."""
+    policy = current_policy()
+    if policy is None or policy.mesh is None:
+        return x
+    spec = policy.spec(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(policy.mesh, spec)
+    )

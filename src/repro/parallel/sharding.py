@@ -1,0 +1,179 @@
+"""Per-arch sharding rules (DESIGN.md §6).
+
+``policy_for(cfg, mesh)`` resolves the per-(arch, mesh) decisions:
+heads/kv-heads/experts shard over 'model' when divisible; otherwise
+attention falls back to sequence sharding and the (small) attention
+weights are replicated. ``param_specs`` / ``batch_specs`` / ``cache_specs``
+produce PartitionSpec pytrees for jit in_shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ArchConfig
+from .axes import ShardingPolicy
+
+__all__ = ["policy_for", "param_specs", "batch_specs", "cache_specs"]
+
+
+def policy_for(cfg: ArchConfig, mesh: jax.sharding.Mesh,
+               batch: Optional[int] = None) -> ShardingPolicy:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.get("model", 1)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_size = 1
+    for a in dp:
+        dp_size *= axes[a]
+    return ShardingPolicy(
+        dp=dp,
+        tp="model",
+        tp_size=tp,
+        dp_size=dp_size,
+        batch_shardable=batch is None or batch % dp_size == 0,
+        shard_heads=cfg.eff_heads % tp == 0,
+        shard_kv_heads=cfg.eff_kv_heads % tp == 0,
+        shard_experts=cfg.moe is not None,  # experts are padded to E % tp == 0
+        seq_shard_attn=cfg.eff_heads % tp != 0,
+        mesh=mesh,
+    )
+
+
+# -- parameter tree ----------------------------------------------------------
+
+def _leaf_spec(name: str, ndim: int, pol: ShardingPolicy) -> P:
+    """Sharding rule for one (unstacked) parameter leaf by name + rank."""
+    tp = pol.tp
+    h = tp if pol.shard_heads else None
+    rules: Dict[Tuple[str, int], P] = {
+        ("embed", 2): P(tp, None),        # vocab-sharded embedding
+        ("head", 2): P(None, tp),
+        ("frontend_proj", 2): P(None, tp),
+        ("norm", 1): P(None),
+        ("ffn_norm", 1): P(None),
+        ("final_norm", 1): P(None),
+        # attention
+        ("wq", 3): P(None, h, None),
+        ("wk", 3): P(None, tp if pol.shard_kv_heads else None, None),
+        ("wv", 3): P(None, tp if pol.shard_kv_heads else None, None),
+        ("wo", 2): P(h, None),
+        # MLA
+        ("wq_a", 2): P(None, None),
+        ("wq_b", 3): P(None, h, None),
+        ("wkv_a", 2): P(None, None),
+        ("wkv_b", 3): P(None, h, None),
+        # dense FFN
+        ("w_gate", 2): P(None, tp),
+        ("w_up", 2): P(None, tp),
+        ("w_down", 2): P(tp, None),
+        # MoE experts (E axis)
+        ("router", 2): P(None, None),
+        ("w_gate", 3): P(tp, None, None),
+        ("w_up", 3): P(tp, None, None),
+        ("w_down", 3): P(tp, None, None),
+        # RG-LRU
+        ("w_in", 2): P(None, tp),
+        ("w_gate_in", 2): P(None, tp),
+        ("conv_w", 2): P(None, tp),
+        ("wr", 2): P(None, tp),
+        ("wi", 2): P(None, tp),
+        ("a_log", 1): P(tp),
+        ("w_out", 2): P(tp, None),
+        # Mamba
+        ("x_proj", 2): P(tp, None),
+        ("dt_proj", 2): P(None, tp),
+        ("dt_bias", 1): P(tp),
+        ("A_log", 2): P(tp, None),
+        ("D", 1): P(tp),
+    }
+    return rules.get((name, ndim), P(*([None] * ndim)))
+
+
+def param_specs(params: Any, pol: ShardingPolicy) -> Any:
+    """PartitionSpec pytree matching ``params`` (stage-stacked leaves get a
+    leading None for the scan axis)."""
+
+    def spec_for(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", None)) or str(getattr(k, "idx", "")) for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str) and not k.isdigit()), "")
+        stacked = "stages" in keys
+        ndim = leaf.ndim - (1 if stacked else 0)
+        base = _leaf_spec(name, ndim, pol)
+        if stacked:
+            return P(None, *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# -- step inputs ---------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, pol: ShardingPolicy, kind: str) -> Any:
+    """Specs for (inputs, labels) or serving inputs."""
+    dp = pol.dp if pol.batch_shardable else ()
+    if cfg.frontend:
+        inputs = P(dp, None, None)  # [B, S, F] embeddings
+    else:
+        inputs = P(dp, None)        # [B, S] tokens
+    if kind == "train":
+        return inputs, P(dp, None)
+    return inputs
+
+
+def cache_specs(cfg: ArchConfig, pol: ShardingPolicy) -> Any:
+    """Spec tree mirroring transformer.init_cache's structure.
+
+    These are strict jit *argument* shardings, so every sharded dimension
+    must divide exactly — ``wide`` picks the largest divisible option:
+    folded (dp+tp) axes when the batch is unshardable, else tp, else
+    replicated.
+    """
+    from ..models.transformer import split_pattern
+
+    tp = pol.tp
+    dp = pol.dp if pol.batch_shardable else ()
+    tp_total = pol.tp_size * (1 if pol.batch_shardable else pol.dp_size)
+
+    def wide(dim: int):
+        if not pol.batch_shardable and dim % tp_total == 0:
+            return pol.dp + (tp,)
+        if dim % max(pol.tp_size, 1) == 0:
+            return tp
+        return None
+
+    def entry(kind: str, stacked: bool, max_len: int):
+        lead = (None,) if stacked else ()
+        if kind in ("attn_global", "attn_local"):
+            rows = max_len
+            if kind == "attn_local" and cfg.window is not None:
+                rows = min(cfg.window, max_len)
+            if pol.shard_kv_heads:
+                kv = P(*lead, dp, tp, None, None)
+            else:
+                kv = P(*lead, dp, None, wide(rows), None)
+            return (kv, kv)
+        if kind == "mla":
+            c = P(*lead, dp, None, None)
+            return (c, c)
+        if kind == "rglru":
+            w = cfg.rglru_width or cfg.d_model
+            return (P(*lead, dp, wide(w)), P(*lead, dp, None, wide(w)))
+        if kind == "mamba":
+            di = cfg.expand * cfg.d_model
+            return (P(*lead, dp, wide(di), None), P(*lead, dp, None, wide(di)))
+        raise ValueError(kind)
+
+    # max_len is only needed for the local-window row count; the callers
+    # always size local caches at min(window, seq) == window for the
+    # assigned shapes, so window is the effective row count.
+    max_len = cfg.window or 0
+
+    prefix, n_stages = split_pattern(cfg)
+    return {
+        "prefix": [entry(k, False, max_len or 1 << 30) for k in prefix],
+        "stages": tuple(entry(k, True, max_len or 1 << 30) for k in cfg.pattern_unit)
+        if n_stages > 0 else None,
+    }

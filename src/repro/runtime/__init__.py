@@ -1,0 +1,6 @@
+"""Runtime loops: fault-tolerant training, ACS-scheduled serving."""
+
+from .serve import ContinuousBatchingServer, Request
+from .train import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "ContinuousBatchingServer", "Request"]

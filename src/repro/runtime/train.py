@@ -1,0 +1,150 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented and CPU-tested:
+
+* **Checkpoint/restart** — params/opt-state/data-cursor checkpointed every
+  ``checkpoint_every`` steps (atomic manifests); a fresh ``Trainer`` on the
+  same directory resumes exactly (tested: loss trajectory continues).
+* **Straggler mitigation** — per-step wall time watchdog: a step slower
+  than ``straggler_factor`` x running median is recorded and the
+  ``on_straggler`` hook fires (at scale: re-dispatch the step's wave /
+  evict the slow host; here: observable metrics + hook).
+* **Failure injection** — ``fail_at_step`` raises mid-run (tests restart
+  and verify bit-exact resumption).
+* **Elastic remesh** — checkpoints are mesh-agnostic (gathered arrays);
+  restoring under a different mesh/policy re-shards on load.
+* **Gradient compression** — optional error-feedback int8 on the gradient
+  stream (cross-pod DP reduction path; optim/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..data import DataCursor, TokenPipeline
+from ..models import init_params, loss_fn
+from ..models.config import ArchConfig
+from ..optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    ef_int8_compress,
+    ef_int8_decompress,
+)
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 32
+    batch: int = 4
+    lr: float = 3e-3
+    warmup: int = 20
+    total_steps: int = 400
+    clip: float = 1.0
+    checkpoint_every: int = 20
+    keep: int = 3
+    straggler_factor: float = 3.0
+    grad_compression: bool = False
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        tcfg: TrainerConfig,
+        ckpt_dir: Path,
+        *,
+        fail_at_step: Optional[int] = None,
+        on_straggler: Optional[Callable[[int, float], None]] = None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.ckpt = CheckpointManager(ckpt_dir, keep=tcfg.keep)
+        self.fail_at_step = fail_at_step
+        self.on_straggler = on_straggler
+        self.schedule = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+        self.pipeline = TokenPipeline(
+            cfg.vocab, tcfg.seq_len, tcfg.batch, seed=tcfg.seed
+        )
+        self.metrics: List[Dict[str, float]] = []
+        self.straggler_steps: List[int] = []
+
+        params = init_params(cfg, jax.random.PRNGKey(tcfg.seed), tp_size=1)
+        opt = adamw_init(params)
+        err = (
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if tcfg.grad_compression else None
+        )
+        self.state = {"params": params, "opt": opt, "err": err}
+
+        restored = self.ckpt.restore_latest(self.state)
+        if restored is not None:
+            self.state, extras = restored
+            self.pipeline.seek(DataCursor.from_dict(extras["cursor"]))
+            self.start_step = int(extras["step"]) + 1
+        else:
+            self.start_step = 0
+
+        tcfg_local = tcfg
+        cfg_local = cfg
+        compress = tcfg.grad_compression
+
+        def step_fn(state, inputs, labels, lr):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg_local, inputs, labels)
+            )(state["params"])
+            grads, gnorm = clip_by_global_norm(grads, tcfg_local.clip)
+            err = state["err"]
+            if compress:
+                # error-feedback int8 round-trip (the cross-pod wire format)
+                q, scales, err = ef_int8_compress(grads, err)
+                grads = ef_int8_decompress(q, scales)
+            params, opt = adamw_update(state["params"], grads, state["opt"], lr)
+            return {"params": params, "opt": opt, "err": err}, {
+                "loss": loss, "gnorm": gnorm,
+            }
+
+        self._step = jax.jit(step_fn)
+
+    def run(self, n_steps: Optional[int] = None) -> List[Dict[str, float]]:
+        end = self.tcfg.total_steps if n_steps is None else self.start_step + n_steps
+        times: List[float] = []
+        for step in range(self.start_step, end):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            inputs, labels = self.pipeline.next_batch()
+            t0 = time.perf_counter()
+            self.state, m = self._step(
+                self.state, jnp.asarray(inputs), jnp.asarray(labels),
+                jnp.asarray(self.schedule(step), jnp.float32),
+            )
+            m = {k: float(v) for k, v in m.items()}
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            med = statistics.median(times[-25:])
+            if len(times) > 5 and dt > self.tcfg.straggler_factor * med:
+                self.straggler_steps.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dt / med)
+            m.update(step=step, dt=dt)
+            self.metrics.append(m)
+            if (step + 1) % self.tcfg.checkpoint_every == 0 or step + 1 == end:
+                self.ckpt.save(
+                    step, self.state,
+                    extras={"cursor": self.pipeline.cursor.as_dict()},
+                )
+        self.start_step = end
+        return self.metrics

@@ -1,0 +1,13 @@
+"""Brax-like GPU physics simulation engine — the paper's workload 1 (§II-B).
+
+Deep-RL data generation: many parallel environment instances, each stepped
+by a stream of *small kernels* (per-joint constraint solves, per-contact
+penalty forces, per-group integration) whose dependency graph is
+input-dependent — the set of active contacts changes with the simulation
+state every step, exactly the irregularity ACS targets.
+"""
+
+from .engine import PhysicsEngine, SimKernelStats
+from .envs import ENVIRONMENTS, EnvSpec, make_env
+
+__all__ = ["PhysicsEngine", "SimKernelStats", "ENVIRONMENTS", "EnvSpec", "make_env"]

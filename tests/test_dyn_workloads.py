@@ -1,0 +1,74 @@
+"""Dynamic & static DNN workloads: construction, ACS equivalence,
+input-dependence of the task stream (paper §II-C)."""
+
+import numpy as np
+import pytest
+
+from repro.core import TaskStream, WaveScheduler, run_serial
+from repro.dyn import WORKLOADS
+
+
+def run_workload(name, scheduler_fn, seed=0, input_seed=1):
+    init_fn, build_fn, _dynamic = WORKLOADS[name]
+    params = init_fn(seed)
+    rng = np.random.RandomState(input_seed)
+    x = rng.randn(1, 3, 32, 32).astype(np.float32)
+    stream = TaskStream()
+    out = build_fn(params, stream, x)
+    scheduler_fn(stream.tasks)
+    return np.asarray(out.value), stream
+
+
+ALL = sorted(WORKLOADS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_builds_and_runs_finite(name):
+    logits, stream = run_workload(name, lambda ts: WaveScheduler(32).run(ts))
+    assert np.all(np.isfinite(logits))
+    assert len(stream.tasks) >= 10  # many small kernels, as in the paper
+
+
+@pytest.mark.parametrize("name", ["instanas", "squeezenet", "randwire", "condconv"])
+def test_acs_matches_serial(name):
+    ref, _ = run_workload(name, lambda ts: run_serial(ts))
+    got, _ = run_workload(name, lambda ts: WaveScheduler(32).run(ts))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["instanas", "dynamic_routing"])
+def test_dynamic_graphs_vary_with_input(name):
+    init_fn, build_fn, dynamic = WORKLOADS[name]
+    assert dynamic
+    counts = set()
+    for input_seed in range(6):
+        params = init_fn(0)
+        rng = np.random.RandomState(input_seed)
+        x = rng.randn(1, 3, 32, 32).astype(np.float32) * (1 + input_seed)
+        stream = TaskStream()
+        build_fn(params, stream, x)
+        counts.add(len(stream.tasks))
+    assert len(counts) > 1, f"{name} stream should vary across inputs: {counts}"
+
+
+@pytest.mark.parametrize("name", ["squeezenet", "nasnet"])
+def test_static_graphs_do_not_vary(name):
+    init_fn, build_fn, dynamic = WORKLOADS[name]
+    assert not dynamic
+    counts = set()
+    for input_seed in range(4):
+        params = init_fn(0)
+        rng = np.random.RandomState(input_seed)
+        x = rng.randn(1, 3, 32, 32).astype(np.float32)
+        stream = TaskStream()
+        build_fn(params, stream, x)
+        counts.add(len(stream.tasks))
+    assert len(counts) == 1
+
+
+def test_parallel_branches_fuse():
+    """SqueezeNet's expand1x1/expand3x3 run in one wave under ACS."""
+    _, stream = run_workload("squeezenet", lambda ts: ts)
+    report = WaveScheduler(window_size=32).run(stream.tasks)
+    assert report.exec_stats["dispatches"] < len(stream.tasks)
+    assert report.exec_stats["max_wave_width"] >= 2

@@ -1,0 +1,173 @@
+"""THE correctness property of ACS (paper §III): out-of-order execution of
+provably-independent kernels must be observationally equivalent to the
+serial single-stream baseline — for every window size, executor, and
+randomly generated irregular task graph.
+
+Random streams are generated hypothesis-style over a shared buffer pool:
+each task reads 1-2 random buffers and writes one (possibly overlapping a
+read — creating RAW/WAR/WAW hazards), with non-commutative arithmetic so
+any illegal reorder changes the result.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BufferPool,
+    DagRunner,
+    Task,
+    ThreadedStreamScheduler,
+    WaveScheduler,
+    run_serial,
+)
+from repro.core.executors import FusedWaveExecutor, SerialExecutor
+from repro.core.task import default_segments
+
+D = 4  # buffer width
+
+
+def _axpy(x, y):
+    return 1.5 * x + y + 1.0  # non-commutative vs. mul
+
+
+def _mul(x, y):
+    return x * y - 0.5
+
+
+def _neg(x, y):
+    return -x + 0.25 * y
+
+
+OPS = {"axpy": _axpy, "mul": _mul, "neg": _neg}
+
+
+def build_stream(seed: int, n_tasks: int, n_buffers: int):
+    """Deterministic random irregular task stream. Returns (pool, tasks)."""
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    buffers = [
+        pool.alloc((D,), np.float32, value=jnp.asarray(rng.randn(D).astype(np.float32)))
+        for _ in range(n_buffers)
+    ]
+    tasks = []
+    names = list(OPS)
+    for _ in range(n_tasks):
+        op = names[rng.randint(len(names))]
+        i0, i1 = rng.randint(n_buffers), rng.randint(n_buffers)
+        o = rng.randint(n_buffers)
+        ins = (buffers[i0], buffers[i1])
+        outs = (buffers[o],)
+        r, w = default_segments(ins, outs)
+        tasks.append(
+            Task(opcode=op, fn=OPS[op], inputs=ins, outputs=outs, read_segments=r, write_segments=w)
+        )
+    return pool, buffers, tasks
+
+
+def final_values(buffers):
+    return np.stack([np.asarray(b.value) for b in buffers])
+
+
+def run_with(scheduler_factory, seed, n_tasks=40, n_buffers=8):
+    pool, buffers, tasks = build_stream(seed, n_tasks, n_buffers)
+    scheduler_factory(tasks)
+    return final_values(buffers)
+
+
+class TestSerialEquivalence:
+    @pytest.mark.parametrize("window", [1, 2, 4, 32])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_wave_scheduler_matches_serial(self, window, seed):
+        ref = run_with(lambda ts: run_serial(ts), seed)
+        got = run_with(lambda ts: WaveScheduler(window_size=window).run(ts), seed)
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_wave_scheduler_serial_executor_matches(self, seed):
+        """Window reordering alone (no fusion) is also equivalent."""
+        ref = run_with(lambda ts: run_serial(ts), seed)
+        got = run_with(
+            lambda ts: WaveScheduler(window_size=16, executor=SerialExecutor()).run(ts), seed
+        )
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_threaded_streams_match_serial(self, seed):
+        """Paper-faithful ACS-SW (K scheduler threads) is equivalent too."""
+        ref = run_with(lambda ts: run_serial(ts), seed)
+        got = run_with(
+            lambda ts: ThreadedStreamScheduler(window_size=16, num_streams=4).run(ts), seed
+        )
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_dag_baseline_matches_serial(self, seed):
+        ref = run_with(lambda ts: run_serial(ts), seed)
+        got = run_with(lambda ts: DagRunner().execute(ts), seed)
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+    @given(st.integers(0, 10_000), st.integers(1, 33))
+    @settings(max_examples=25, deadline=None)
+    def test_property_any_seed_any_window(self, seed, window):
+        ref = run_with(lambda ts: run_serial(ts), seed, n_tasks=24, n_buffers=6)
+        got = run_with(
+            lambda ts: WaveScheduler(window_size=window).run(ts), seed, n_tasks=24, n_buffers=6
+        )
+        np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+class TestSchedulerBehaviour:
+    def test_window_one_is_serial(self):
+        _, _, tasks = build_stream(0, 20, 5)
+        report = WaveScheduler(window_size=1).run(tasks)
+        assert all(len(w) == 1 for w in report.waves)
+        assert report.exec_stats["dispatches"] == 20
+
+    def test_independent_stream_fuses_to_one_wave(self):
+        """Fully independent tasks inside one window => a single wide wave."""
+        pool = BufferPool()
+        ins = [pool.alloc((D,), np.float32, value=jnp.ones(D)) for _ in range(8)]
+        outs = [pool.alloc((D,), np.float32, value=jnp.zeros(D)) for _ in range(8)]
+        tasks = []
+        for i in range(8):
+            r, w = default_segments((ins[i], ins[i]), (outs[i],))
+            tasks.append(
+                Task(opcode="axpy", fn=_axpy, inputs=(ins[i], ins[i]), outputs=(outs[i],),
+                     read_segments=r, write_segments=w)
+            )
+        report = WaveScheduler(window_size=32).run(tasks)
+        assert len(report.waves) == 1
+        assert report.exec_stats["max_wave_width"] == 8
+        assert report.exec_stats["dispatches"] == 1  # fused: 8 kernels, 1 launch
+
+    def test_wave_cache_hits_across_runs(self):
+        """Recurring wave signatures reuse compiled programs (A2)."""
+        executor = FusedWaveExecutor()
+        for _ in range(3):
+            pool = BufferPool()
+            ins = [pool.alloc((D,), np.float32, value=jnp.ones(D)) for _ in range(4)]
+            outs = [pool.alloc((D,), np.float32, value=jnp.zeros(D)) for _ in range(4)]
+            tasks = []
+            for i in range(4):
+                r, w = default_segments((ins[i], ins[i]), (outs[i],))
+                tasks.append(
+                    Task(opcode="mul", fn=_mul, inputs=(ins[i], ins[i]), outputs=(outs[i],),
+                         read_segments=r, write_segments=w)
+                )
+            WaveScheduler(window_size=32, executor=executor).run(tasks)
+        assert executor.stats.compiles == 1  # one compile, reused across runs
+        assert executor.stats.dispatches == 3
+
+    def test_max_wave_caps_width(self):
+        _, _, tasks = build_stream(7, 30, 30)  # mostly independent
+        report = WaveScheduler(window_size=32, max_wave=4).run(tasks)
+        assert report.exec_stats["max_wave_width"] <= 4
+
+    def test_report_occupancy_proxy_bounds(self):
+        _, _, tasks = build_stream(0, 30, 8)
+        r = WaveScheduler(window_size=32).run(tasks)
+        assert 0.0 < r.occupancy_proxy() <= 1.0

@@ -1,0 +1,115 @@
+"""Unit + property tests for the segment algebra (paper Algorithm 1)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
+
+
+def seg(start, size):
+    return Segment(start, size)
+
+
+class TestScalarOverlap:
+    def test_disjoint(self):
+        assert not segments_overlap(seg(0, 10), seg(10, 10))  # half-open touch
+        assert not segments_overlap(seg(0, 10), seg(100, 10))
+
+    def test_identical(self):
+        assert segments_overlap(seg(5, 10), seg(5, 10))
+
+    def test_contained(self):
+        assert segments_overlap(seg(0, 100), seg(10, 5))
+        assert segments_overlap(seg(10, 5), seg(0, 100))
+
+    def test_partial(self):
+        assert segments_overlap(seg(0, 10), seg(5, 10))
+        assert segments_overlap(seg(5, 10), seg(0, 10))
+
+    def test_empty_segment_never_overlaps(self):
+        assert not segments_overlap(seg(5, 0), seg(0, 100))
+        assert not segments_overlap(seg(0, 100), seg(5, 0))
+
+
+segments_strategy = st.lists(
+    st.builds(Segment, st.integers(0, 1000), st.integers(0, 64)),
+    min_size=0,
+    max_size=8,
+)
+
+
+class TestVectorizedMatchesScalar:
+    @given(segments_strategy, segments_strategy)
+    @settings(max_examples=200, deadline=None)
+    def test_intersects_equals_any_overlap(self, xs, ys):
+        assert SegmentSet(xs).intersects(SegmentSet(ys)) == any_overlap(xs, ys)
+
+    @given(segments_strategy, segments_strategy)
+    @settings(max_examples=100, deadline=None)
+    def test_symmetry(self, xs, ys):
+        assert SegmentSet(xs).intersects(SegmentSet(ys)) == SegmentSet(ys).intersects(
+            SegmentSet(xs)
+        )
+
+
+class TestHazards:
+    """RAW / WAR / WAW must each independently create a dependency."""
+
+    def test_raw(self):
+        # new reads [0,10); old writes [5,10)
+        assert depends_on(
+            SegmentSet([seg(0, 10)]),
+            SegmentSet([seg(100, 10)]),
+            SegmentSet([]),
+            SegmentSet([seg(5, 5)]),
+        )
+
+    def test_war(self):
+        # new writes [0,10); old reads [5,10)
+        assert depends_on(
+            SegmentSet([]),
+            SegmentSet([seg(0, 10)]),
+            SegmentSet([seg(5, 10)]),
+            SegmentSet([]),
+        )
+
+    def test_waw(self):
+        assert depends_on(
+            SegmentSet([]),
+            SegmentSet([seg(0, 10)]),
+            SegmentSet([]),
+            SegmentSet([seg(0, 10)]),
+        )
+
+    def test_rar_is_not_a_hazard(self):
+        # both only read the same region: independent.
+        assert not depends_on(
+            SegmentSet([seg(0, 10)]),
+            SegmentSet([seg(100, 4)]),
+            SegmentSet([seg(0, 10)]),
+            SegmentSet([seg(200, 4)]),
+        )
+
+    def test_disjoint_everything(self):
+        assert not depends_on(
+            SegmentSet([seg(0, 10)]),
+            SegmentSet([seg(10, 10)]),
+            SegmentSet([seg(20, 10)]),
+            SegmentSet([seg(30, 10)]),
+        )
+
+
+class TestSegmentSet:
+    def test_union_len(self):
+        a = SegmentSet([seg(0, 1), seg(2, 1)])
+        b = SegmentSet([seg(4, 1)])
+        assert len(a.union(b)) == 3
+
+    def test_iter_roundtrip(self):
+        xs = [seg(0, 4), seg(8, 8)]
+        assert list(SegmentSet(xs)) == xs
+
+    def test_empty(self):
+        assert not SegmentSet([]).intersects(SegmentSet([seg(0, 10)]))
+        assert len(SegmentSet()) == 0

@@ -1,0 +1,68 @@
+"""The Brax-like physics engine as an ACS workload (paper §II-B, §VI-A)."""
+
+import numpy as np
+import pytest
+
+from repro.core import TaskStream, WaveScheduler, run_serial
+from repro.sim import ENVIRONMENTS, PhysicsEngine, make_env
+
+
+@pytest.mark.parametrize("env", ["ant", "cheetah"])
+def test_engine_steps_and_stays_finite(env):
+    eng = PhysicsEngine(make_env(env), n_envs=8, group_size=4, seed=0)
+    stream = TaskStream()
+    for _ in range(3):
+        eng.emit_step(stream)
+        WaveScheduler(window_size=32).run(stream.tasks[-200:] if False else stream.tasks)
+        stream = TaskStream()  # drain per step
+    snap = eng.state_snapshot()
+    assert snap.shape == (8, eng.spec.n_bodies, 6)
+    assert np.all(np.isfinite(snap))
+
+
+def test_acs_matches_serial_execution():
+    """ACS scheduling of the physics stream is bit-compatible with serial."""
+    def run(scheduler_fn):
+        eng = PhysicsEngine(make_env("ant"), n_envs=8, group_size=4, seed=3)
+        for _ in range(4):
+            stream = TaskStream()
+            eng.emit_step(stream)
+            scheduler_fn(stream.tasks)
+        return eng.state_snapshot()
+
+    ref = run(lambda ts: run_serial(ts))
+    got = run(lambda ts: WaveScheduler(window_size=32).run(ts))
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=1e-6)
+
+
+def test_input_dependence_of_contact_kernels():
+    """The active-contact set (and so the task stream) varies with state —
+    the paper's defining property of these workloads."""
+    eng = PhysicsEngine(make_env("grasp"), n_envs=8, group_size=4, seed=0)
+    counts = []
+    for _ in range(6):
+        stream = TaskStream()
+        eng.emit_step(stream)
+        counts.append(len(stream.tasks))
+        WaveScheduler(window_size=32).run(stream.tasks)
+    assert len(set(counts)) > 1, f"stream should vary with state, got {counts}"
+
+
+def test_waves_expose_cross_group_parallelism():
+    eng = PhysicsEngine(make_env("walker2d"), n_envs=16, group_size=4, seed=0)
+    stream = TaskStream()
+    eng.emit_step(stream)
+    report = WaveScheduler(window_size=32).run(stream.tasks)
+    serial = len(stream.tasks)
+    assert report.exec_stats["dispatches"] < serial / 2, (
+        "fused waves should need far fewer dispatches than one-per-kernel"
+    )
+    assert report.exec_stats["max_wave_width"] >= 4
+
+
+def test_all_five_paper_environments_construct():
+    for name, spec in ENVIRONMENTS.items():
+        eng = PhysicsEngine(spec, n_envs=4, group_size=4, seed=0)
+        stream = TaskStream()
+        eng.emit_step(stream)
+        assert len(stream.tasks) > spec.n_joints

@@ -1,0 +1,122 @@
+"""Scheduling-window mechanics (paper §III-C/D, Fig 14/15)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BufferPool,
+    SchedulingWindow,
+    Task,
+    TaskState,
+)
+from repro.core.task import default_segments
+
+
+def make_task(pool, reads, writes, opcode="op"):
+    """reads/writes: lists of Buffer (full-range segments)."""
+    r, w = default_segments(reads, writes)
+    return Task(
+        opcode=opcode,
+        fn=lambda *xs: xs[0] if xs else None,
+        inputs=tuple(reads),
+        outputs=tuple(writes),
+        read_segments=r,
+        write_segments=w,
+    )
+
+
+@pytest.fixture
+def pool():
+    return BufferPool()
+
+
+def bufs(pool, n, d=4):
+    return [pool.alloc((d,), np.float32, value=np.zeros(d, np.float32)) for _ in range(n)]
+
+
+class TestWindowBasics:
+    def test_independent_tasks_all_ready(self, pool):
+        bs = bufs(pool, 6)
+        w = SchedulingWindow(size=8)
+        tasks = [make_task(pool, [bs[2 * i]], [bs[2 * i + 1]]) for i in range(3)]
+        w.submit_all(tasks)
+        assert len(w.ready_tasks()) == 3
+
+    def test_chain_serializes(self, pool):
+        a, b, c = bufs(pool, 3)
+        w = SchedulingWindow(size=8)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [b], [c])  # RAW on b
+        w.submit_all([t1, t2])
+        ready = w.ready_tasks()
+        assert ready == [t1]
+        w.mark_executing(t1)
+        w.retire(t1)
+        assert w.ready_tasks() == [t2]
+
+    def test_waw_serializes(self, pool):
+        a, b = bufs(pool, 2)
+        w = SchedulingWindow(size=8)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [a], [b])
+        w.submit_all([t1, t2])
+        assert w.ready_tasks() == [t1]
+
+    def test_window_caps_residency(self, pool):
+        bs = bufs(pool, 20)
+        w = SchedulingWindow(size=4)
+        tasks = [make_task(pool, [bs[i]], [bs[i + 10]]) for i in range(10)]
+        w.submit_all(tasks)
+        assert w.resident() == 4
+        assert len(w.fifo) == 6
+
+    def test_retire_refills_from_fifo(self, pool):
+        bs = bufs(pool, 20)
+        w = SchedulingWindow(size=2)
+        tasks = [make_task(pool, [bs[i]], [bs[i + 10]]) for i in range(4)]
+        w.submit_all(tasks)
+        t = w.ready_tasks()[0]
+        w.mark_executing(t)
+        w.retire(t)
+        assert w.resident() == 2  # refilled
+        assert w.stats.retired == 1
+
+    def test_fifo_order_preserves_program_order_dependencies(self, pool):
+        """A task never enters the window before an older task it depends on
+        has either entered or retired (FIFO insertion order)."""
+        a, b, c = bufs(pool, 3)
+        w = SchedulingWindow(size=1)  # degenerate: serial
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [b], [c])
+        t3 = make_task(pool, [a], [c])  # WAW with t2 on c
+        w.submit_all([t1, t2, t3])
+        order = []
+        while not w.drained():
+            ready = w.ready_tasks()
+            assert len(ready) == 1  # window=1 degenerates to serial
+            t = ready[0]
+            w.mark_executing(t)
+            w.retire(t)
+            order.append(t.tid)
+        assert order == [t1.tid, t2.tid, t3.tid]
+
+    def test_mark_executing_requires_ready(self, pool):
+        a, b, c = bufs(pool, 3)
+        w = SchedulingWindow(size=4)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [b], [c])
+        w.submit_all([t1, t2])
+        with pytest.raises(RuntimeError):
+            w.mark_executing(t2)  # still PENDING
+
+    def test_stats_dep_check_count(self, pool):
+        bs = bufs(pool, 8)
+        w = SchedulingWindow(size=8)
+        tasks = [make_task(pool, [bs[i]], [bs[i + 4]]) for i in range(4)]
+        w.submit_all(tasks)
+        # k-th insertion checks against k resident tasks: 0+1+2+3
+        assert w.stats.dep_checks == 6
+
+    def test_invalid_window_size(self):
+        with pytest.raises(ValueError):
+            SchedulingWindow(size=0)
