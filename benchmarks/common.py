@@ -12,8 +12,10 @@ from typing import Callable, Dict, List, Sequence
 import numpy as np
 
 from repro.core import (
+    AsyncFrontierScheduler,
     RTX3060_LIKE,
     TaskStream,
+    ThreadedStreamScheduler,
     WaveScheduler,
     run_serial,
     simulate,
@@ -24,6 +26,34 @@ from repro.core.dag_baseline import DagRunner, build_full_dag
 
 def emit(name: str, metric: str, value) -> None:
     print(f"{name},{metric},{value}")
+
+
+# -- scheduler selection (shared by bench_frontier and the run.py CLI) -----
+#
+# ``OPTIONS`` holds run-wide flag overrides parsed by ``run.py``
+# (e.g. ``--window=16 --streams=8 --inflight=4``); benches read them via
+# ``opt()`` so one CLI tunes every section consistently.
+OPTIONS: Dict[str, str] = {}
+
+# CLI flag keys run.py accepts; each maps --<flag>=N onto make_scheduler.
+FLAG_KEYS = ("window", "streams", "inflight")
+
+
+def opt(key: str, default: int) -> int:
+    return int(OPTIONS.get(key, default))
+
+
+def make_scheduler(name: str, window: int = 32, num_streams: int = 4,
+                   max_inflight: int = 8):
+    """repro.core.make_scheduler with CLI flag overrides applied."""
+    from repro.core import make_scheduler as core_make_scheduler
+
+    return core_make_scheduler(
+        name,
+        window_size=opt("window", window),
+        num_streams=opt("streams", num_streams),
+        max_inflight=opt("inflight", max_inflight),
+    )
 
 
 def paper_scale_sim_tasks(env: str, steps: int = 2, seed: int = 0,

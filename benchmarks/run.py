@@ -1,6 +1,10 @@
 """Benchmark runner: one section per paper table/figure (DESIGN.md §8).
 Prints ``name,metric,value`` CSV. Usage:
-    PYTHONPATH=src python -m benchmarks.run [section ...]
+    PYTHONPATH=src python -m benchmarks.run [--flag=value ...] [section ...]
+
+Flags (consumed by sections via common.opt): --window=N sets the ACS
+window size, --streams=K the thread count for the threaded scheduler,
+--inflight=M the frontier scheduler's in-flight group cap.
 """
 
 from __future__ import annotations
@@ -12,12 +16,14 @@ from . import (
     bench_dag_overhead,
     bench_depcheck,
     bench_dynamic_dnn,
+    bench_frontier,
     bench_moe_waves,
     bench_occupancy,
     bench_rl_e2e,
     bench_sim_speedup,
     bench_static_dnn,
     bench_window_size,
+    common,
 )
 
 SECTIONS = {
@@ -30,11 +36,31 @@ SECTIONS = {
     "static_dnn": bench_static_dnn,      # Figs 27/28
     "window_size": bench_window_size,    # Fig 29
     "moe_waves": bench_moe_waves,        # beyond-paper (DESIGN §4)
+    "frontier": bench_frontier,          # beyond-paper (DESIGN §9)
 }
 
 
 def main() -> None:
-    chosen = sys.argv[1:] or list(SECTIONS)
+    chosen = []
+    for arg in sys.argv[1:]:
+        if arg.startswith("--") and "=" in arg:
+            key, _, value = arg[2:].partition("=")
+            if key not in common.FLAG_KEYS:
+                raise SystemExit(
+                    f"unknown flag --{key}; choose from: "
+                    + ", ".join(f"--{k}=N" for k in common.FLAG_KEYS)
+                )
+            if not value.isdigit() or int(value) < 1:
+                raise SystemExit(f"--{key} expects a positive integer, got {value!r}")
+            common.OPTIONS[key] = value
+        else:
+            chosen.append(arg)
+    unknown = [n for n in chosen if n not in SECTIONS]
+    if unknown:
+        raise SystemExit(
+            f"unknown section(s) {unknown}; choose from: {', '.join(SECTIONS)}"
+        )
+    chosen = chosen or list(SECTIONS)
     print("section,metric,value")
     for name in chosen:
         mod = SECTIONS[name]

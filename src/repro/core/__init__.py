@@ -4,7 +4,8 @@ contribution), adapted to TPU/JAX. See DESIGN.md §2 for the mapping."""
 from .buffers import Buffer, BufferPool, BufferView
 from .dag_baseline import DagRunner, build_full_dag, level_schedule
 from .device_dispatch import DeviceOpRegistry, DeviceWindowRunner, plan_waves
-from .executors import FusedWaveExecutor, SerialExecutor
+from .executors import FusedWaveExecutor, GroupExecutor, SerialExecutor
+from .frontier import AsyncFrontierScheduler, DispatchQueue
 from .perfmodel import (
     DeviceModel,
     RTX3060_LIKE,
@@ -13,9 +14,12 @@ from .perfmodel import (
     simulate,
 )
 from .scheduler import (
+    GroupTrace,
+    SCHEDULER_NAMES,
     SchedulerReport,
     ThreadedStreamScheduler,
     WaveScheduler,
+    make_scheduler,
     run_serial,
 )
 from .segments import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
@@ -34,15 +38,21 @@ __all__ = [
     "DeviceWindowRunner",
     "plan_waves",
     "FusedWaveExecutor",
+    "GroupExecutor",
     "SerialExecutor",
+    "AsyncFrontierScheduler",
+    "DispatchQueue",
     "DeviceModel",
     "RTX3060_LIKE",
     "RTX3070_LIKE",
     "TPU_V5E_CORE",
     "simulate",
+    "GroupTrace",
+    "SCHEDULER_NAMES",
     "SchedulerReport",
     "ThreadedStreamScheduler",
     "WaveScheduler",
+    "make_scheduler",
     "run_serial",
     "Segment",
     "SegmentSet",

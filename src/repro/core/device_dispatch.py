@@ -40,7 +40,13 @@ from .scheduler import SchedulerReport
 from .task import Task, operand_shape
 from .window import SchedulingWindow
 
-__all__ = ["DeviceOpRegistry", "compile_wave_plan", "DeviceWindowRunner"]
+__all__ = [
+    "DeviceOpRegistry",
+    "compile_wave_plan",
+    "plan_waves",
+    "plan_frontier",
+    "DeviceWindowRunner",
+]
 
 MAX_ARITY = 3
 
@@ -85,9 +91,50 @@ def plan_waves(tasks: Sequence[Task], window_size: int = 32) -> List[List[Task]]
         for t in ready:
             window.mark_executing(t)
         waves.append(ready)
-        for t in ready:
-            window.retire(t)
+        window.retire_many(ready)
     return waves
+
+
+def plan_frontier(
+    tasks: Sequence[Task], window_size: int = 32, max_group: Optional[int] = None
+) -> List[List[Task]]:
+    """Frontier-plan mode: one homogeneous group per device step.
+
+    Wave planning retires an entire front per scan step, so every step is
+    padded to the *widest wave* and a slow-to-unblock kernel stretches the
+    whole table. The frontier plan instead retires one homogeneous group at
+    a time, re-collecting the READY set between groups — newly unblocked
+    kernels join the very next step rather than waiting out the front.
+    Steps are narrower but denser (higher active-slot fraction), which is
+    what the ``lax.scan`` interpreter pays for: inactive slots still
+    evaluate ``lax.switch`` against the dummy row.
+    """
+    from .executors import group_by_signature
+
+    window = SchedulingWindow(window_size)
+    window.submit_all(tasks)
+    groups: List[List[Task]] = []
+    while not window.drained():
+        ready = window.ready_tasks()
+        if not ready:
+            raise RuntimeError("stall while planning frontier groups")
+        group = group_by_signature(ready)[0]
+        if max_group is not None:
+            group = group[:max_group]
+        for t in group:
+            window.mark_executing(t)
+        window.retire_many(group)
+        groups.append(group)
+    return groups
+
+
+def plan_active_fraction(plan: Sequence[Sequence[Task]]) -> float:
+    """Fraction of (step, slot) table cells holding a real kernel — the
+    padding-waste metric the frontier plan improves."""
+    if not plan:
+        return 1.0
+    max_w = max(len(step) for step in plan)
+    return sum(len(step) for step in plan) / (len(plan) * max_w)
 
 
 def compile_wave_plan(
@@ -119,9 +166,19 @@ def compile_wave_plan(
 class DeviceWindowRunner:
     """Compile once, then execute entire task streams in ONE dispatch."""
 
-    def __init__(self, registry: DeviceOpRegistry, window_size: int = 32):
+    def __init__(
+        self,
+        registry: DeviceOpRegistry,
+        window_size: int = 32,
+        plan_mode: str = "wave",
+        max_group: Optional[int] = None,
+    ):
+        if plan_mode not in ("wave", "frontier"):
+            raise ValueError(f"plan_mode must be 'wave' or 'frontier', got {plan_mode!r}")
         self.registry = registry
         self.window_size = window_size
+        self.plan_mode = plan_mode
+        self.max_group = max_group
         self._compiled: Dict[Tuple, Callable] = {}
         self.stats: Dict[str, Any] = {}
 
@@ -155,7 +212,10 @@ class DeviceWindowRunner:
         buffers: Sequence,  # core.buffers.Buffer, uniform padded shape (D,)
     ) -> SchedulerReport:
         t0 = time.perf_counter()
-        waves = plan_waves(tasks, self.window_size)
+        if self.plan_mode == "frontier":
+            waves = plan_frontier(tasks, self.window_size, self.max_group)
+        else:
+            waves = plan_waves(tasks, self.window_size)
         plan_time = time.perf_counter() - t0
 
         buffer_index = {b.name: i for i, b in enumerate(buffers)}
@@ -188,4 +248,6 @@ class DeviceWindowRunner:
         stats.exec_seconds = exec_time
         report = SchedulerReport(window, stats, plan_time + exec_time, [[t.tid for t in w] for w in waves])
         report.plan_seconds = plan_time  # type: ignore[attr-defined]
+        report.plan_mode = self.plan_mode  # type: ignore[attr-defined]
+        report.plan_active_fraction = plan_active_fraction(waves)  # type: ignore[attr-defined]
         return report

@@ -14,6 +14,14 @@ ready set into one launch* (DESIGN.md §2, assumption A1):
   signature multiset — the "CUDA-Graph-without-reconstruction" property:
   different inputs produce different graphs, but recurring wave *shapes*
   reuse compiled artifacts (A2).
+* :class:`GroupExecutor` — the frontier half-executor (DESIGN.md §9). One
+  homogeneous group per launch, split into non-blocking ``launch()`` /
+  ``poll()`` halves: ``launch`` rides JAX async dispatch and writes the
+  *future* arrays straight into the output buffers (downstream kernels
+  chain on them without host sync), ``poll`` asks the runtime whether the
+  group's results have landed, and ``sync`` is the explicit blocking
+  fallback — counted separately, because blocking syncs are exactly the
+  §II-D overhead the frontier scheduler exists to avoid.
 
 Dispatch counts are recorded: they are the TPU-side analogue of the kernel
 launch + synchronization overheads of §II-D.
@@ -22,14 +30,21 @@ launch + synchronization overheads of §II-D.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from .task import Task
+from .task import Task, operand_dtype, operand_shape
 
-__all__ = ["ExecStats", "SerialExecutor", "FusedWaveExecutor"]
+__all__ = [
+    "ExecStats",
+    "SerialExecutor",
+    "FusedWaveExecutor",
+    "GroupExecutor",
+    "GroupHandle",
+    "group_by_signature",
+]
 
 
 class ExecStats:
@@ -39,6 +54,11 @@ class ExecStats:
         self.tasks_run = 0
         self.wave_widths: List[int] = []
         self.exec_seconds = 0.0
+        # Host-blocking device syncs (block_until_ready). Wave/serial
+        # executors sync implicitly via value consumption; the frontier
+        # path counts every explicit block so "syncs << dispatches" is a
+        # checkable property.
+        self.blocking_syncs = 0
 
     def as_dict(self) -> Dict[str, Any]:
         w = np.asarray(self.wave_widths or [0])
@@ -50,6 +70,7 @@ class ExecStats:
             "mean_wave_width": float(w.mean()),
             "max_wave_width": int(w.max()),
             "exec_seconds": self.exec_seconds,
+            "blocking_syncs": self.blocking_syncs,
         }
 
 
@@ -79,7 +100,8 @@ class SerialExecutor:
         jax.block_until_ready(jax.numpy.zeros(()))
 
 
-def _group_by_signature(tasks: Sequence[Task]) -> List[List[Task]]:
+def group_by_signature(tasks: Sequence[Task]) -> List[List[Task]]:
+    """Partition tasks into homogeneous (batchable) groups, oldest-first."""
     groups: Dict[Tuple, List[Task]] = {}
     order: List[Tuple] = []
     for t in tasks:
@@ -89,6 +111,9 @@ def _group_by_signature(tasks: Sequence[Task]) -> List[List[Task]]:
             order.append(key)
         groups[key].append(t)
     return [groups[k] for k in order]
+
+
+_group_by_signature = group_by_signature  # backwards-compat alias
 
 
 class FusedWaveExecutor:
@@ -160,6 +185,118 @@ class FusedWaveExecutor:
             else:
                 g[0].write_outputs(outs)
         self.stats.exec_seconds += time.perf_counter() - t0
+
+    def finalize(self) -> None:
+        jax.block_until_ready(jax.numpy.zeros(()))
+
+
+class GroupHandle:
+    """An in-flight homogeneous group: the launch's raw result arrays plus
+    the tasks whose window slots it still occupies."""
+
+    __slots__ = ("tasks", "raw_outputs", "t_launch")
+
+    def __init__(self, tasks: Sequence[Task], raw_outputs: List[Any], t_launch: float):
+        self.tasks = list(tasks)
+        self.raw_outputs = raw_outputs  # flat list of jax arrays (futures)
+        self.t_launch = t_launch
+
+
+def _is_ready(arr: Any) -> bool:
+    is_ready = getattr(arr, "is_ready", None)
+    if is_ready is None:
+        return True  # no async introspection: treat dispatch as landed
+    return bool(is_ready())
+
+
+class GroupExecutor:
+    """Non-blocking group launches for the frontier scheduler.
+
+    ``launch`` dispatches one homogeneous group (vmapped when width > 1)
+    and immediately writes the un-materialized result arrays into the
+    output buffers: JAX async dispatch makes them futures, and any
+    downstream kernel consuming those buffers chains on-device without a
+    host round-trip. ``poll`` is the non-blocking completion probe;
+    ``sync`` is the blocking fallback (counted in ``stats.blocking_syncs``).
+
+    ``warm`` is the compile-ahead half: building a group's jitted callable
+    while *other* groups execute hides compilation behind device time
+    (DESIGN.md §9 double-buffering).
+    """
+
+    def __init__(self) -> None:
+        self.stats = ExecStats()
+        self._fn_cache: Dict[Tuple, Callable] = {}
+
+    # -- compile-ahead -----------------------------------------------------
+    @staticmethod
+    def _abstract_inputs(group: Sequence[Task]) -> List[Any]:
+        t = group[0]
+        batch = (len(group),) if len(group) > 1 else ()
+        return [
+            jax.ShapeDtypeStruct(batch + operand_shape(x), operand_dtype(x))
+            for x in t.inputs
+        ]
+
+    def warm(self, group: Sequence[Task]) -> Callable:
+        """Eager compile (jax.jit alone is lazy — tracing+XLA would
+        otherwise happen inside ``launch`` and stall the dispatch loop).
+        Warming calls the jitted fn once on zero-filled arrays of the
+        group's shapes: that populates the wrapper's own dispatch cache, so
+        real launches stay on jit's C++ fast path (an AOT
+        ``lower().compile()`` executable would dispatch through the slower
+        Python path on every launch). The dummy work is tiny and async."""
+        key = (group[0].signature, len(group) > 1)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            base = group[0].fn
+            fn = jax.jit(jax.vmap(base)) if len(group) > 1 else jax.jit(base)
+            try:
+                fn(*(jax.numpy.zeros(s.shape, s.dtype)
+                     for s in self._abstract_inputs(group)))
+            except Exception:
+                pass  # fall back to compile-at-first-launch
+            self._fn_cache[key] = fn
+            self.stats.compiles += 1
+        return fn
+
+    # -- non-blocking halves -----------------------------------------------
+    def launch(self, group: Sequence[Task]) -> GroupHandle:
+        fn = self.warm(group)
+        if len(group) > 1:
+            n_in = len(group[0].inputs)
+            vals = [t.input_values() for t in group]
+            stacked = tuple(
+                jax.numpy.stack([v[i] for v in vals]) for i in range(n_in)
+            )
+            outs = fn(*stacked)
+            raw: List[Any] = []
+            if isinstance(outs, (tuple, list)):
+                for i, t in enumerate(group):
+                    vals = tuple(o[i] for o in outs)
+                    t.write_outputs(vals)
+                    raw.extend(vals)
+            else:
+                for i, t in enumerate(group):
+                    t.write_outputs(outs[i])
+                raw.append(outs)
+        else:
+            outs = fn(*group[0].input_values())
+            group[0].write_outputs(outs)
+            raw = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+        self.stats.dispatches += 1
+        self.stats.tasks_run += len(group)
+        self.stats.wave_widths.append(len(group))
+        return GroupHandle(group, raw, time.perf_counter())
+
+    def poll(self, handle: GroupHandle) -> bool:
+        """True iff every result of the group has landed on device."""
+        return all(_is_ready(a) for a in handle.raw_outputs)
+
+    def sync(self, handle: GroupHandle) -> None:
+        """Blocking fallback: wait for the group (the §II-D overhead)."""
+        jax.block_until_ready(handle.raw_outputs)
+        self.stats.blocking_syncs += 1
 
     def finalize(self) -> None:
         jax.block_until_ready(jax.numpy.zeros(()))

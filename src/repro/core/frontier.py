@@ -1,0 +1,229 @@
+"""Async frontier scheduling — retiring dependencies, not waves.
+
+Both seed ACS-SW schedulers are barrier-bound. :class:`~.scheduler.WaveScheduler`
+retires an entire wave before refilling the window, so the slowest kernel
+in a wave gates every successor — even ones whose true upstreams finished
+long ago. :class:`~.scheduler.ThreadedStreamScheduler` retires at kernel
+granularity but pays a global lock plus a ``block_until_ready`` per kernel,
+exactly the per-kernel sync overhead §II-D budgets against. The remaining
+speedup (Jangda et al.'s fine-grained kernel synchronization, Atos's
+asynchronous frontiers) lives between those two points: retire and dispatch
+at the granularity of individual dependency edges, without a host sync per
+kernel.
+
+:class:`AsyncFrontierScheduler` implements that point on TPU/JAX
+(DESIGN.md §9):
+
+* the READY set is partitioned into homogeneous groups (equal
+  ``Task.signature``) and each *group* is dispatched asynchronously via
+  :class:`~.executors.GroupExecutor` — JAX async dispatch returns future
+  arrays which are written straight into the output buffers, so downstream
+  groups chain on-device and the host never blocks per kernel;
+* groups retire individually, as their results land (non-blocking
+  ``poll``), immediately waking only their true downstreams — no wave
+  barrier;
+* dependency checking (window insertion) and wave-program compilation
+  (``GroupExecutor.warm``) are overlapped against in-flight execution via
+  a double-buffered dispatch queue: while launched groups execute, the
+  next groups are staged (dep-checked + compiled); the buffers flip and
+  the staged groups launch while their successors stage.
+
+A blocking sync happens only when the pipeline truly stalls (window full
+of in-flight work and nothing polls complete); ``ExecStats.blocking_syncs``
+counts these, and the benchmark acceptance bar is syncs << dispatches.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Deque, Iterable, List, Optional, Sequence, Set
+
+from .executors import GroupExecutor, GroupHandle
+from .scheduler import GroupTrace, SchedulerReport
+from .task import Task
+from .window import SchedulingWindow
+
+__all__ = ["AsyncFrontierScheduler", "DispatchQueue"]
+
+
+class DispatchQueue:
+    """Double-buffered, coalescing group staging.
+
+    ``stage()`` sorts freshly-READY kernels into per-signature buckets in
+    the *back* buffer while previously-launched groups are still executing.
+    Buckets coalesce: a kernel that wakes two retires after its batchable
+    sibling still joins the same bucket, so group width recovers even
+    though the frontier never waits for a full wave (the pipeline delay
+    before the next ``flip`` IS the batching window). ``flip()`` promotes
+    the back buffer to launchable — warming compiled callables on the way,
+    one iteration ahead of launch — once the front has drained. The point
+    is pipelining: dependency analysis, batching, and compilation happen
+    behind device time, and the launch loop only ever touches ready-made
+    groups.
+    """
+
+    def __init__(self, max_group: Optional[int] = None):
+        self.max_group = max_group
+        # back buffer: signature -> coalescing bucket (insertion-ordered)
+        self._staged: "collections.OrderedDict[tuple, List[Task]]" = (
+            collections.OrderedDict()
+        )
+        self._launchable: Deque[List[Task]] = collections.deque()  # front
+        self._queued_tids: Set[int] = set()
+
+    def stage(self, ready: Sequence[Task]) -> int:
+        """Bucket not-yet-queued READY tasks by signature; returns the
+        number of new buckets opened."""
+        opened = 0
+        for t in ready:
+            if t.tid in self._queued_tids:
+                continue
+            bucket = self._staged.get(t.signature)
+            if bucket is None:
+                bucket = self._staged[t.signature] = []
+                opened += 1
+            bucket.append(t)
+            self._queued_tids.add(t.tid)
+        return opened
+
+    def flip(self, executor: GroupExecutor) -> bool:
+        """Promote the back buffer once the front is drained; compile-warm
+        every promoted group (ahead of its launch next iteration)."""
+        if self._launchable or not self._staged:
+            return False
+        for bucket in self._staged.values():
+            while bucket:
+                cut = bucket[: self.max_group] if self.max_group else bucket
+                bucket = bucket[len(cut):]
+                executor.warm(cut)
+                self._launchable.append(cut)
+        self._staged = collections.OrderedDict()
+        return True
+
+    def pop(self) -> Optional[List[Task]]:
+        if not self._launchable:
+            return None
+        group = self._launchable.popleft()
+        for t in group:
+            self._queued_tids.discard(t.tid)
+        return group
+
+    @property
+    def has_launchable(self) -> bool:
+        return bool(self._launchable)
+
+    def empty(self) -> bool:
+        return not self._staged and not self._launchable
+
+
+class AsyncFrontierScheduler:
+    """Windowed out-of-order scheduler with rolling, barrier-free retire.
+
+    Parameters
+    ----------
+    window_size:
+        ACS scheduling window size (paper default 32).
+    max_inflight:
+        Cap on simultaneously in-flight groups — the analogue of the
+        paper's stream count. More in-flight groups = more overlap, but
+        retire latency for any one group grows.
+    max_group:
+        Cap on tasks fused per group launch (None = unbounded), mirroring
+        ``WaveScheduler.max_wave``.
+    """
+
+    def __init__(
+        self,
+        window_size: int = 32,
+        executor: Optional[GroupExecutor] = None,
+        max_inflight: int = 8,
+        max_group: Optional[int] = None,
+    ):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.window_size = window_size
+        self.executor = executor if executor is not None else GroupExecutor()
+        self.max_inflight = max_inflight
+        self.max_group = max_group
+
+    def run(self, stream: Iterable[Task]) -> SchedulerReport:
+        window = SchedulingWindow(self.window_size)
+        window.submit_all(list(stream))
+        ex = self.executor
+        queue = DispatchQueue(self.max_group)
+        inflight: Deque[GroupHandle] = collections.deque()
+        traces: List[GroupTrace] = []
+        waves: List[List[int]] = []  # launch-order trace (one entry/group)
+
+        t0 = time.perf_counter()
+
+        def retire(handle: GroupHandle, blocking: bool) -> None:
+            window.retire_many(handle.tasks)
+            traces.append(
+                GroupTrace(
+                    [t.tid for t in handle.tasks],
+                    handle.t_launch - t0,
+                    time.perf_counter() - t0,
+                    blocking=blocking,
+                )
+            )
+
+        while not (window.drained() and not inflight and queue.empty()):
+            progressed = False
+
+            # 1. Retire every group whose results have landed (non-blocking
+            #    poll). Retiring wakes only true downstreams and refills the
+            #    window from the FIFO — the rolling frontier.
+            still: Deque[GroupHandle] = collections.deque()
+            for handle in inflight:
+                if ex.poll(handle):
+                    retire(handle, blocking=False)
+                    progressed = True
+                else:
+                    still.append(handle)
+            inflight = still
+
+            # 2. Launch previously staged groups (front buffer) up to the
+            #    in-flight cap.
+            while len(inflight) < self.max_inflight and queue.has_launchable:
+                group = queue.pop()
+                assert group is not None
+                for t in group:
+                    window.mark_executing(t)
+                inflight.append(ex.launch(group))
+                waves.append([t.tid for t in group])
+                progressed = True
+
+            # 3. Stage the *next* groups from the current READY set into the
+            #    back buffer, coalescing batchable siblings: dependency
+            #    state is maintained incrementally by the window.
+            queue.stage(window.ready_tasks())
+
+            # 4. Flip the double buffer when the front has drained (warms
+            #    compiles one iteration ahead of launch, overlapped with
+            #    the in-flight device work launched in step 2).
+            if queue.flip(ex):
+                progressed = True
+
+            if progressed:
+                continue
+
+            # 5. Pipeline stall: nothing landed, nothing launchable, nothing
+            #    newly ready. Block on the oldest in-flight group — the one
+            #    whose downstreams have waited longest.
+            if inflight:
+                handle = inflight.popleft()
+                ex.sync(handle)
+                retire(handle, blocking=True)
+            elif not window.drained():
+                # No in-flight work, no READY kernels, window non-empty:
+                # impossible by the window's no-deadlock invariant.
+                raise RuntimeError(
+                    "frontier stall: no READY kernels but window non-empty"
+                )
+
+        ex.finalize()
+        wall = time.perf_counter() - t0
+        ex.stats.exec_seconds = wall
+        return SchedulerReport(window, ex.stats, wall, waves, groups=traces)

@@ -29,15 +29,54 @@ from .task import Task
 from .window import SchedulingWindow
 from .wrapper import TaskStream
 
-__all__ = ["SchedulerReport", "WaveScheduler", "ThreadedStreamScheduler", "run_serial"]
+__all__ = [
+    "GroupTrace",
+    "SchedulerReport",
+    "WaveScheduler",
+    "ThreadedStreamScheduler",
+    "run_serial",
+    "SCHEDULER_NAMES",
+    "make_scheduler",
+]
+
+
+class GroupTrace:
+    """Lifetime of one dispatched group: frontier schedules overlap, so a
+    flat wave list cannot express the timeline — launch/retire stamps can."""
+
+    __slots__ = ("tids", "t_launch", "t_retire", "blocking")
+
+    def __init__(self, tids: List[int], t_launch: float, t_retire: float, blocking: bool = False):
+        self.tids = tids
+        self.t_launch = t_launch
+        self.t_retire = t_retire
+        self.blocking = blocking  # retired via blocking sync, not poll
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "tids": list(self.tids),
+            "t_launch": self.t_launch,
+            "t_retire": self.t_retire,
+            "blocking": self.blocking,
+        }
 
 
 class SchedulerReport:
-    def __init__(self, window: SchedulingWindow, exec_stats: ExecStats, wall_seconds: float, waves: List[List[int]]):
+    def __init__(
+        self,
+        window: SchedulingWindow,
+        exec_stats: ExecStats,
+        wall_seconds: float,
+        waves: List[List[int]],
+        groups: Optional[List[GroupTrace]] = None,
+    ):
         self.window_stats = window.stats.as_dict()
         self.exec_stats = exec_stats.as_dict()
         self.wall_seconds = wall_seconds
         self.waves = waves  # list of lists of tids (schedule trace)
+        # Overlapping-lifetime trace (frontier schedulers): one entry per
+        # dispatched group, launch/retire timestamped relative to run start.
+        self.groups = groups if groups is not None else []
 
     @property
     def mean_wave_width(self) -> float:
@@ -50,13 +89,37 @@ class SchedulerReport:
         cap = max_parallel or max(widths)
         return sum(min(w, cap) for w in widths) / (len(widths) * cap)
 
+    def max_inflight_groups(self) -> int:
+        """Peak number of groups simultaneously in flight (trace-derived):
+        >1 means the scheduler actually overlapped execution windows."""
+        events = []
+        for g in self.groups:
+            events.append((g.t_launch, 1))
+            events.append((g.t_retire, -1))
+        depth = peak = 0
+        for _, delta in sorted(events):
+            depth += delta
+            peak = max(peak, depth)
+        return peak
+
+    def retire_order(self) -> List[int]:
+        """Tids in retirement order (groups sorted by retire stamp)."""
+        order: List[int] = []
+        for g in sorted(self.groups, key=lambda g: g.t_retire):
+            order.extend(g.tids)
+        return order
+
     def as_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "wall_seconds": self.wall_seconds,
             "waves": len(self.waves),
             **{f"window_{k}": v for k, v in self.window_stats.items()},
             **{f"exec_{k}": v for k, v in self.exec_stats.items()},
         }
+        if self.groups:
+            out["groups"] = len(self.groups)
+            out["max_inflight_groups"] = self.max_inflight_groups()
+        return out
 
 
 class WaveScheduler:
@@ -96,6 +159,10 @@ class ThreadedStreamScheduler:
     def __init__(self, window_size: int = 32, num_streams: int = 4):
         self.window_size = window_size
         self.num_streams = num_streams
+        # Per-signature compiled kernels live across run() calls, like
+        # SerialExecutor._jit_cache — a long-running runtime recompiles per
+        # new kernel shape, not per stream.
+        self._jit_cache: Dict = {}
 
     def run(self, stream: Iterable[Task]) -> SchedulerReport:
         window = SchedulingWindow(self.window_size)
@@ -103,7 +170,7 @@ class ThreadedStreamScheduler:
         window.submit_all(tasks)
         lock = threading.Lock()
         stats = ExecStats()
-        jit_cache: Dict = {}
+        jit_cache = self._jit_cache
         waves: List[List[int]] = []  # per-stream launch trace (width 1 each)
 
         def stream_worker() -> None:
@@ -154,3 +221,28 @@ def run_serial(stream: Iterable[Task]) -> SchedulerReport:
     """The single-stream baseline: program order, one dispatch per kernel."""
     sched = WaveScheduler(window_size=1, executor=SerialExecutor())
     return sched.run(stream)
+
+
+SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier")
+
+
+def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
+                   max_inflight: int = 8):
+    """Factory over the four ACS-SW execution policies; the single source
+    benchmarks and examples share. Returns a *persistent* scheduler's bound
+    ``run`` (``tasks -> SchedulerReport``): compile caches — including the
+    serial baseline's per-signature jit cache — carry across streams, as a
+    long-running runtime's would."""
+    if name == "serial":
+        return WaveScheduler(window_size=1, executor=SerialExecutor()).run
+    if name == "wave":
+        return WaveScheduler(window_size=window_size).run
+    if name == "threaded":
+        return ThreadedStreamScheduler(window_size=window_size,
+                                       num_streams=num_streams).run
+    if name == "frontier":
+        from .frontier import AsyncFrontierScheduler
+
+        return AsyncFrontierScheduler(window_size=window_size,
+                                      max_inflight=max_inflight).run
+    raise ValueError(f"unknown scheduler {name!r}; choose from {SCHEDULER_NAMES}")

@@ -21,13 +21,22 @@ full RAW/WAR/WAW check (`segments.depends_on`).
 Because insertion order == program order, dependencies only ever point
 from newer to older kernels; the window can never deadlock, and a window
 of size 1 degenerates to the serial baseline (tested property).
+
+Ready-set maintenance is **incremental** (DESIGN.md §9): each slot keeps
+its upstream tid set AND the window keeps the reverse adjacency
+(tid -> dependent tids), so a retire touches only the retiree's true
+downstreams — O(out-degree) — instead of rescanning every resident slot.
+The READY set is an index keyed by insertion sequence number; since a
+woken dependent can carry an older seq than a task inserted READY after
+it, `ready_tasks()` sorts the (small) index — O(R log R) — to report
+oldest-first program order.
 """
 
 from __future__ import annotations
 
 import collections
 import enum
-from typing import Deque, Dict, Iterable, List, Optional
+from typing import Deque, Dict, Iterable, List, Optional, Sequence, Set
 
 from .segments import depends_on, window_upstreams
 from .task import Task
@@ -42,12 +51,13 @@ class TaskState(enum.Enum):
 
 
 class _Slot:
-    __slots__ = ("task", "upstream", "state")
+    __slots__ = ("task", "upstream", "state", "seq")
 
-    def __init__(self, task: Task, upstream: set, state: TaskState):
+    def __init__(self, task: Task, upstream: set, state: TaskState, seq: int):
         self.task = task
         self.upstream = upstream  # set of tids this task waits on
         self.state = state
+        self.seq = seq  # monotone insertion index (== program order)
 
 
 class WindowStats:
@@ -76,6 +86,16 @@ class SchedulingWindow:
         self.fifo: Deque[Task] = collections.deque()
         self.slots: "collections.OrderedDict[int, _Slot]" = collections.OrderedDict()
         self.stats = WindowStats()
+        self._seq = 0
+        # Reverse dependency edges: producer tid -> tids of resident
+        # dependents. Maintained at insertion; consumed at retire so the
+        # upstream update is O(out-degree), not O(window).
+        self._downstream: Dict[int, Set[int]] = {}
+        # READY slots keyed by insertion seq -> tid. NOT oldest-first by
+        # dict order: a retire can wake a PENDING dependent whose seq is
+        # older than a task inserted READY after it, so ready_tasks()
+        # sorts by seq to report program order.
+        self._ready: Dict[int, int] = {}
 
     # -- producer side ----------------------------------------------------
     def submit(self, task: Task) -> None:
@@ -89,24 +109,29 @@ class SchedulingWindow:
     # -- scheduler side ---------------------------------------------------
     def ready_tasks(self) -> List[Task]:
         """All READY kernels, oldest-first (they may launch concurrently)."""
-        return [s.task for s in self.slots.values() if s.state is TaskState.READY]
+        if len(self._ready) > 1:
+            seqs = sorted(self._ready)
+        else:
+            seqs = list(self._ready)
+        return [self.slots[self._ready[s]].task for s in seqs]
 
     def mark_executing(self, task: Task) -> None:
         slot = self.slots[task.tid]
         if slot.state is not TaskState.READY:
             raise RuntimeError(f"task {task.tid} launched while {slot.state}")
         slot.state = TaskState.EXECUTING
+        del self._ready[slot.seq]
 
     def retire(self, task: Task) -> None:
         """Kernel completed: drop it, update upstream lists, refill window."""
-        slot = self.slots.pop(task.tid)
-        if slot.state is not TaskState.EXECUTING:
-            raise RuntimeError(f"task {task.tid} retired while {slot.state}")
-        for other in self.slots.values():
-            other.upstream.discard(task.tid)
-            if not other.upstream and other.state is TaskState.PENDING:
-                other.state = TaskState.READY
-        self.stats.retired += 1
+        self._retire_no_fill(task)
+        self._fill()
+
+    def retire_many(self, tasks: Sequence[Task]) -> None:
+        """Batch retire (one refill pass): the frontier scheduler retires a
+        whole homogeneous group at once when its results land."""
+        for task in tasks:
+            self._retire_no_fill(task)
         self._fill()
 
     def drained(self) -> bool:
@@ -116,6 +141,21 @@ class SchedulingWindow:
         return len(self.slots)
 
     # -- internals ----------------------------------------------------------
+    def _retire_no_fill(self, task: Task) -> None:
+        slot = self.slots.get(task.tid)
+        if slot is None:
+            raise RuntimeError(f"task {task.tid} retired but not resident")
+        if slot.state is not TaskState.EXECUTING:
+            raise RuntimeError(f"task {task.tid} retired while {slot.state}")
+        del self.slots[task.tid]
+        for dep_tid in self._downstream.pop(task.tid, ()):
+            dep = self.slots[dep_tid]
+            dep.upstream.discard(task.tid)
+            if not dep.upstream and dep.state is TaskState.PENDING:
+                dep.state = TaskState.READY
+                self._ready[dep.seq] = dep_tid
+        self.stats.retired += 1
+
     def _fill(self) -> None:
         while self.fifo and len(self.slots) < self.size:
             task = self.fifo.popleft()
@@ -129,7 +169,13 @@ class SchedulingWindow:
                 [self.slots[t].task.write_segments for t in tids],
             )
             upstream = {tid for tid, hit in zip(tids, mask) if hit}
+            for up_tid in upstream:
+                self._downstream.setdefault(up_tid, set()).add(task.tid)
             state = TaskState.PENDING if upstream else TaskState.READY
-            self.slots[task.tid] = _Slot(task, upstream, state)
+            slot = _Slot(task, upstream, state, self._seq)
+            self._seq += 1
+            self.slots[task.tid] = slot
+            if state is TaskState.READY:
+                self._ready[slot.seq] = task.tid
             self.stats.inserted += 1
             self.stats.max_resident = max(self.stats.max_resident, len(self.slots))

@@ -1,0 +1,140 @@
+"""Property-test shim: `hypothesis` when available, seeded `random` otherwise.
+
+The test suite's property tests only use a narrow hypothesis surface —
+``given``/``settings`` decorators and the ``integers``/``lists``/``builds``
+strategies. When hypothesis is installed we re-export the real thing
+(shrinking, example databases, the works). When it is not (the common case
+in hermetic containers), a tiny deterministic stand-in runs each property
+against ``max_examples`` pseudo-random draws seeded from the test's
+qualified name, so failures reproduce across runs and machines.
+
+Usage (drop-in for the three import lines the suite used):
+
+    from _prophelper import given, settings, st
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback: seeded-random property driver
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A draw(rng) -> value closure with hypothesis-ish repr."""
+
+        def __init__(self, draw, name="strategy"):
+            self._draw = draw
+            self._name = name
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self._name
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.randint(min_value, max_value),
+                f"integers({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value),
+                f"floats({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options), "sampled_from(...)")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw, f"lists({elements!r})")
+
+        @staticmethod
+        def builds(target, *args, **kwargs):
+            def draw(rng):
+                a = [s.draw(rng) for s in args]
+                k = {key: s.draw(rng) for key, s in kwargs.items()}
+                return target(*a, **k)
+
+            return _Strategy(draw, f"builds({getattr(target, '__name__', target)!r})")
+
+        @staticmethod
+        def tuples(*args):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in args), "tuples(...)"
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        """Records max_examples on the test fn for ``given`` to pick up."""
+
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        """Run the wrapped test against N deterministic random draws.
+
+        Seeded from the test's qualified name (crc32), so every run and
+        every machine replays the same example sequence; a failing draw's
+        arguments are attached to the raised exception.
+        """
+
+        def deco(fn):
+            import functools
+            import inspect
+
+            max_examples = getattr(fn, "_prop_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*call_args, **call_kwargs):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for example in range(max_examples):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    try:
+                        fn(*call_args, *drawn, **call_kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"property falsified on example {example} "
+                            f"(seed {seed}): args={drawn!r}"
+                        ) from exc
+
+            # Hide the drawn parameters from pytest's fixture resolution
+            # (the trailing len(strategies) params are filled by draws).
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            wrapper.__signature__ = sig.replace(
+                parameters=params[: len(params) - len(strategies)]
+            )
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return deco

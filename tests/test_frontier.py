@@ -1,0 +1,229 @@
+"""AsyncFrontierScheduler correctness: serial equivalence on randomized
+irregular streams, dependency-safe retirement order, and the async
+properties the design promises (overlapping group lifetimes, blocking
+syncs << dispatches)."""
+
+import numpy as np
+import pytest
+from _prophelper import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    AsyncFrontierScheduler,
+    BufferPool,
+    DispatchQueue,
+    GroupExecutor,
+    Task,
+    build_full_dag,
+    run_serial,
+)
+from repro.core.task import default_segments
+
+D = 4
+
+
+def _axpy(x, y):
+    return 1.5 * x + y + 1.0
+
+
+def _mul(x, y):
+    return x * y - 0.5
+
+
+def _neg(x, y):
+    return -x + 0.25 * y
+
+
+OPS = {"axpy": _axpy, "mul": _mul, "neg": _neg}
+
+
+def build_stream(seed: int, n_tasks: int, n_buffers: int):
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    buffers = [
+        pool.alloc((D,), np.float32, value=jnp.asarray(rng.randn(D).astype(np.float32)))
+        for _ in range(n_buffers)
+    ]
+    tasks = []
+    names = list(OPS)
+    for _ in range(n_tasks):
+        op = names[rng.randint(len(names))]
+        i0, i1 = rng.randint(n_buffers), rng.randint(n_buffers)
+        o = rng.randint(n_buffers)
+        ins = (buffers[i0], buffers[i1])
+        outs = (buffers[o],)
+        r, w = default_segments(ins, outs)
+        tasks.append(
+            Task(opcode=op, fn=OPS[op], inputs=ins, outputs=outs, read_segments=r, write_segments=w)
+        )
+    return pool, buffers, tasks
+
+
+def final_values(buffers):
+    return np.stack([np.asarray(b.value) for b in buffers])
+
+
+class TestFrontierSerialEquivalence:
+    @pytest.mark.parametrize("window", [1, 2, 8, 32])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_serial(self, window, seed):
+        _, bufs, tasks = build_stream(seed, 40, 8)
+        run_serial(tasks)
+        ref = final_values(bufs)
+        _, bufs2, tasks2 = build_stream(seed, 40, 8)
+        AsyncFrontierScheduler(window_size=window).run(tasks2)
+        np.testing.assert_allclose(final_values(bufs2), ref, rtol=1e-6)
+
+    @given(st.integers(0, 10_000), st.integers(1, 33), st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_property_any_seed_window_inflight(self, seed, window, inflight):
+        _, bufs, tasks = build_stream(seed, 24, 6)
+        run_serial(tasks)
+        ref = final_values(bufs)
+        _, bufs2, tasks2 = build_stream(seed, 24, 6)
+        AsyncFrontierScheduler(window_size=window, max_inflight=inflight).run(tasks2)
+        np.testing.assert_allclose(final_values(bufs2), ref, rtol=1e-6)
+
+    def test_max_group_cap_still_equivalent(self):
+        _, bufs, tasks = build_stream(5, 40, 12)
+        run_serial(tasks)
+        ref = final_values(bufs)
+        _, bufs2, tasks2 = build_stream(5, 40, 12)
+        report = AsyncFrontierScheduler(window_size=32, max_group=2).run(tasks2)
+        np.testing.assert_allclose(final_values(bufs2), ref, rtol=1e-6)
+        assert report.exec_stats["max_wave_width"] <= 2
+
+
+class TestFrontierRetirementOrder:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_property_never_retires_before_upstreams(self, seed):
+        """A kernel's retire stamp must come after every true upstream's:
+        the frontier may reorder independent kernels only."""
+        _, _, tasks = build_stream(seed, 30, 6)
+        edges, _ = build_full_dag(tasks)
+        report = AsyncFrontierScheduler(window_size=16).run(tasks)
+        pos = {tid: i for i, tid in enumerate(report.retire_order())}
+        assert len(pos) == len(tasks)  # every task retired exactly once
+        for t in tasks:
+            for up in edges[t.tid]:
+                assert pos[up] < pos[t.tid], (
+                    f"task {t.tid} retired before upstream {up}"
+                )
+
+    def test_launch_order_respects_dependencies(self):
+        _, _, tasks = build_stream(3, 40, 6)
+        edges, _ = build_full_dag(tasks)
+        report = AsyncFrontierScheduler(window_size=32).run(tasks)
+        launch_pos = {}
+        for i, group in enumerate(report.waves):
+            for tid in group:
+                launch_pos[tid] = i
+        for t in tasks:
+            for up in edges[t.tid]:
+                assert launch_pos[up] < launch_pos[t.tid]
+
+
+class TestFrontierAsyncProperties:
+    def test_blocking_syncs_fewer_than_dispatches(self):
+        _, _, tasks = build_stream(0, 60, 10)
+        report = AsyncFrontierScheduler(window_size=32).run(tasks)
+        stats = report.exec_stats
+        assert stats["dispatches"] > 0
+        assert stats["blocking_syncs"] < stats["dispatches"]
+
+    def test_groups_overlap_on_independent_stream(self):
+        """Fully independent heterogeneous tasks: several groups should be
+        in flight at once (no wave barrier between them)."""
+        pool = BufferPool()
+        tasks = []
+        for i in range(12):
+            op = list(OPS)[i % 3]
+            a = pool.alloc((D,), np.float32, value=jnp.ones(D))
+            b = pool.alloc((D,), np.float32, value=jnp.zeros(D))
+            r, w = default_segments((a, a), (b,))
+            tasks.append(
+                Task(opcode=op, fn=OPS[op], inputs=(a, a), outputs=(b,),
+                     read_segments=r, write_segments=w)
+            )
+        report = AsyncFrontierScheduler(window_size=32, max_inflight=8).run(tasks)
+        assert report.max_inflight_groups() > 1
+        assert len(report.groups) == len(report.waves)
+
+    def test_group_trace_stamps_ordered(self):
+        _, _, tasks = build_stream(1, 30, 8)
+        report = AsyncFrontierScheduler(window_size=16).run(tasks)
+        for g in report.groups:
+            assert 0.0 <= g.t_launch <= g.t_retire
+        assert sum(len(g.tids) for g in report.groups) == 30
+
+    def test_executor_reuse_hits_compile_cache(self):
+        ex = GroupExecutor()
+        for seed in (0, 0, 0):
+            _, _, tasks = build_stream(seed, 20, 5)
+            AsyncFrontierScheduler(window_size=16, executor=ex).run(tasks)
+        # Same stream shape re-run: compiles stay bounded by distinct
+        # (signature, batched) pairs, not by total dispatches.
+        assert ex.stats.compiles <= 6
+        assert ex.stats.tasks_run == 60
+
+    def test_invalid_max_inflight(self):
+        with pytest.raises(ValueError):
+            AsyncFrontierScheduler(max_inflight=0)
+
+
+class TestDispatchQueue:
+    def _tasks(self, n):
+        pool = BufferPool()
+        out = []
+        for i in range(n):
+            a = pool.alloc((D,), np.float32, value=jnp.ones(D))
+            b = pool.alloc((D,), np.float32, value=jnp.zeros(D))
+            r, w = default_segments((a, a), (b,))
+            out.append(Task(opcode="axpy", fn=_axpy, inputs=(a, a), outputs=(b,),
+                            read_segments=r, write_segments=w))
+        return out
+
+    def test_stage_dedups_already_queued(self):
+        q = DispatchQueue()
+        tasks = self._tasks(4)
+        assert q.stage(tasks) == 1  # one homogeneous bucket opened
+        assert q.stage(tasks) == 0  # all queued already
+
+    def test_stage_coalesces_batchable_siblings(self):
+        """A sibling staged on a later scheduler iteration joins the
+        existing bucket instead of fragmenting into its own group."""
+        q = DispatchQueue()
+        ex = GroupExecutor()
+        tasks = self._tasks(6)  # all share one signature
+        assert q.stage(tasks[:2]) == 1
+        assert q.stage(tasks[2:5]) == 0  # merged into the open bucket
+        q.flip(ex)
+        assert len(q.pop()) == 5
+
+    def test_flip_only_when_front_drained(self):
+        q = DispatchQueue()
+        ex = GroupExecutor()
+        q.stage(self._tasks(2))
+        assert q.flip(ex)
+        q.stage(self._tasks(2))
+        assert not q.flip(ex)  # front still holds the first group
+        assert q.pop() is not None
+        assert q.flip(ex)  # now the back buffer promotes
+        assert q.pop() is not None
+        assert q.pop() is None
+        assert q.empty()
+
+    def test_max_group_splits(self):
+        q = DispatchQueue(max_group=3)
+        ex = GroupExecutor()
+        assert q.stage(self._tasks(8)) == 1  # one bucket; split at flip
+        q.flip(ex)
+        sizes = []
+        while True:
+            g = q.pop()
+            if g is None:
+                break
+            sizes.append(len(g))
+        assert sizes == [3, 3, 2]

@@ -3,8 +3,7 @@ swept over shapes and dtypes, plus hypothesis property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _prophelper import given, settings, st
 
 import jax
 import jax.numpy as jnp

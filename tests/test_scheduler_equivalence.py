@@ -11,8 +11,7 @@ any illegal reorder changes the result.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _prophelper import given, settings, st
 
 import jax.numpy as jnp
 

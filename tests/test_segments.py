@@ -1,8 +1,7 @@
 """Unit + property tests for the segment algebra (paper Algorithm 1)."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _prophelper import given, settings, st
 
 from repro.core import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
 

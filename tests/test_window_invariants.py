@@ -1,0 +1,209 @@
+"""Window invariants promised by window.py's docstring but previously
+untested: serial degeneracy at size 1, residency cap, retire-state
+validation, no-deadlock on full-window streams, and the incremental
+retire_many path matching single retires."""
+
+import numpy as np
+import pytest
+from _prophelper import given, settings, st
+
+from repro.core import BufferPool, SchedulingWindow, Task, TaskState
+from repro.core.task import default_segments
+
+
+def make_task(pool, reads, writes, opcode="op"):
+    r, w = default_segments(reads, writes)
+    return Task(
+        opcode=opcode,
+        fn=lambda *xs: xs[0] if xs else None,
+        inputs=tuple(reads),
+        outputs=tuple(writes),
+        read_segments=r,
+        write_segments=w,
+    )
+
+
+def bufs(pool, n, d=4):
+    return [pool.alloc((d,), np.float32, value=np.zeros(d, np.float32)) for _ in range(n)]
+
+
+def random_stream(seed, n_tasks, n_buffers):
+    """Random read/write pattern over a shared pool — dense hazards."""
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    bs = bufs(pool, n_buffers)
+    tasks = []
+    for _ in range(n_tasks):
+        i0, i1 = rng.randint(n_buffers), rng.randint(n_buffers)
+        o = rng.randint(n_buffers)
+        tasks.append(make_task(pool, [bs[i0], bs[i1]], [bs[o]]))
+    return tasks
+
+
+def drain(window):
+    """Drive the window to empty; returns retire order. Raises on stall."""
+    order = []
+    while not window.drained():
+        ready = window.ready_tasks()
+        if not ready:
+            raise RuntimeError("stall: no READY kernels but window non-empty")
+        t = ready[0]
+        window.mark_executing(t)
+        window.retire(t)
+        order.append(t.tid)
+    return order
+
+
+class TestSerialDegeneracy:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_window_one_is_program_order(self, seed):
+        tasks = random_stream(seed, 20, 4)
+        w = SchedulingWindow(size=1)
+        w.submit_all(tasks)
+        assert drain(w) == [t.tid for t in tasks]
+
+    def test_window_one_single_ready_at_a_time(self):
+        tasks = random_stream(0, 10, 3)
+        w = SchedulingWindow(size=1)
+        w.submit_all(tasks)
+        while not w.drained():
+            ready = w.ready_tasks()
+            assert len(ready) == 1
+            w.mark_executing(ready[0])
+            w.retire(ready[0])
+
+
+class TestRetireValidation:
+    def test_retire_pending_raises(self):
+        pool = BufferPool()
+        a, b, c = bufs(pool, 3)
+        w = SchedulingWindow(size=4)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [b], [c])  # RAW on b -> PENDING
+        w.submit_all([t1, t2])
+        with pytest.raises(RuntimeError):
+            w.retire(t2)
+
+    def test_retire_ready_but_not_executing_raises(self):
+        pool = BufferPool()
+        a, b = bufs(pool, 2)
+        w = SchedulingWindow(size=4)
+        t1 = make_task(pool, [a], [b])
+        w.submit_all([t1])
+        with pytest.raises(RuntimeError):
+            w.retire(t1)  # READY, never marked EXECUTING
+
+    def test_retire_unknown_task_raises(self):
+        pool = BufferPool()
+        a, b = bufs(pool, 2)
+        w = SchedulingWindow(size=4)
+        stranger = make_task(pool, [a], [b])
+        with pytest.raises(RuntimeError):
+            w.retire(stranger)
+
+    def test_double_retire_raises(self):
+        pool = BufferPool()
+        a, b = bufs(pool, 2)
+        w = SchedulingWindow(size=4)
+        t1 = make_task(pool, [a], [b])
+        w.submit_all([t1])
+        w.mark_executing(t1)
+        w.retire(t1)
+        with pytest.raises(RuntimeError):
+            w.retire(t1)
+
+
+class TestResidencyCap:
+    @given(st.integers(0, 10_000), st.integers(1, 9))
+    @settings(max_examples=25, deadline=None)
+    def test_property_max_resident_never_exceeds_size(self, seed, size):
+        tasks = random_stream(seed, 30, 5)
+        w = SchedulingWindow(size=size)
+        w.submit_all(tasks)
+        drain(w)
+        assert w.stats.max_resident <= size
+        assert w.stats.inserted == 30
+        assert w.stats.retired == 30
+
+
+class TestNoDeadlock:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_full_window_stream_never_stalls(self, seed):
+        """Dense-hazard stream longer than the window: there is always at
+        least one READY kernel until drained (docstring's no-deadlock
+        claim — dependencies only point newer -> older)."""
+        tasks = random_stream(seed, 40, 3)  # 3 buffers: nearly total order
+        w = SchedulingWindow(size=8)
+        w.submit_all(tasks)
+        drain(w)  # raises on stall
+        assert w.drained()
+
+    def test_conservative_chain_fills_window_and_drains(self):
+        """Every task conflicts with every other: window full of one READY
+        + PENDINGs, still drains serially."""
+        pool = BufferPool()
+        (shared,) = bufs(pool, 1)
+        tasks = [make_task(pool, [shared], [shared]) for _ in range(12)]
+        w = SchedulingWindow(size=4)
+        w.submit_all(tasks)
+        assert drain(w) == [t.tid for t in tasks]
+
+
+class TestRetireMany:
+    def test_matches_sequential_retires(self):
+        for seed in range(3):
+            tasks_a = random_stream(seed, 24, 6)
+            wa = SchedulingWindow(size=8)
+            wa.submit_all(tasks_a)
+            order_a = []
+            while not wa.drained():
+                ready = wa.ready_tasks()
+                for t in ready:
+                    wa.mark_executing(t)
+                wa.retire_many(ready)
+                order_a.extend(t.tid for t in ready)
+
+            tasks_b = random_stream(seed, 24, 6)
+            wb = SchedulingWindow(size=8)
+            wb.submit_all(tasks_b)
+            order_b = []
+            while not wb.drained():
+                ready = wb.ready_tasks()
+                for t in ready:
+                    wb.mark_executing(t)
+                for t in ready:
+                    wb.retire(t)
+                order_b.extend(t.tid for t in ready)
+
+            # tid sequences differ (fresh Task objects) but relative order
+            # within each stream must be identical.
+            pos_a = {tid: i for i, tid in enumerate(t.tid for t in tasks_a)}
+            pos_b = {tid: i for i, tid in enumerate(t.tid for t in tasks_b)}
+            assert [pos_a[t] for t in order_a] == [pos_b[t] for t in order_b]
+
+    def test_retire_many_validates_states(self):
+        pool = BufferPool()
+        a, b, c = bufs(pool, 3)
+        w = SchedulingWindow(size=4)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [a], [c])
+        w.submit_all([t1, t2])
+        w.mark_executing(t1)
+        with pytest.raises(RuntimeError):
+            w.retire_many([t1, t2])  # t2 not EXECUTING
+
+    def test_ready_tasks_oldest_first_after_partial_retire(self):
+        pool = BufferPool()
+        a, b, c, d, e = bufs(pool, 5)
+        w = SchedulingWindow(size=8)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [b], [c])  # waits on t1
+        t3 = make_task(pool, [d], [e])  # independent
+        w.submit_all([t1, t2, t3])
+        assert [t.tid for t in w.ready_tasks()] == [t1.tid, t3.tid]
+        w.mark_executing(t1)
+        w.retire(t1)
+        # t2 woke up; ordering must remain program order (t2 before t3)
+        assert [t.tid for t in w.ready_tasks()] == [t2.tid, t3.tid]
