@@ -1,0 +1,147 @@
+"""ACS-HW analogue vs host-side scheduling on the REAL workloads.
+
+The seed's device-resident window only ran a uniform toy universe; the
+shape-class slab arena (DESIGN §2 A3) lets it execute the actual sim and
+dyn streams — so this section finally puts the one-dispatch path on the
+same axis as the host schedulers:
+
+* **policies**: serial (one dispatch per kernel), threaded (paper ACS-SW:
+  K streams, per-kernel sync), frontier (async group retirement), and the
+  device runner in both plan modes (wave / frontier lowering; ONE dispatch
+  per stream).
+* **columns**: wall seconds + speedup vs serial, dispatch count (the
+  §II-D communication-overhead axis), active fraction (host: wave-width
+  occupancy proxy; device: plan table density), and — device only — the
+  arena's padding waste per shape class, the price of uniform row
+  indexing over heterogeneous kernels.
+* **equivalence**: every policy's final buffer contents are checked
+  bit-identical against the serial baseline (``matches_serial``).
+
+Timing is warm: each policy runs one throwaway stream first (populating
+jit / lowered-program caches, as a long-running runtime would), then a
+structurally identical fresh stream is timed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DeviceWindowRunner, TaskStream
+
+from .common import chosen_policies, emit, make_scheduler, opt, smoke
+
+HOST_POLICIES = ("serial", "threaded", "frontier")
+DEVICE_MODES = ("wave", "frontier")
+
+
+def _sim_leg():
+    from repro.sim import ENVIRONMENTS, PhysicsEngine
+
+    n_envs, group, steps = (4, 2, 1) if smoke() else (8, 4, 2)
+
+    def build(seed=0):
+        eng = PhysicsEngine(ENVIRONMENTS["cheetah"], n_envs=n_envs,
+                            group_size=group, seed=seed)
+        stream = TaskStream()
+        eng.emit_batch(stream, steps)
+        return eng.state_snapshot, stream.tasks
+
+    return "device_sim_cheetah", build
+
+
+def _dyn_leg():
+    from repro.dyn import WORKLOADS
+
+    init_fn, build_fn, _ = WORKLOADS["dynamic_routing"]
+    rng = np.random.RandomState(0)
+    x = rng.randn(1, 3, 32, 32).astype(np.float32)
+
+    def build(seed=0):
+        params = init_fn(0)
+        stream = TaskStream()
+        out = build_fn(params, stream, x)
+        return (lambda o=out: np.asarray(o.value)), stream.tasks
+
+    return "device_dyn_routing", build
+
+
+def _snapshot(fn):
+    return np.asarray(fn())
+
+
+def _per_run(measured, warm, key):
+    """Measured-run counter for schedulers whose ExecStats may persist
+    across runs (serial/frontier accumulate; threaded resets). The warm
+    and measured streams are structurally identical, so a cumulative
+    counter shows measured > warm and the delta is the per-run value."""
+    m, w = measured.exec_stats[key], warm.exec_stats[key]
+    return m - w if m > w else m
+
+
+def compare(name: str, build) -> None:
+    window = opt("window", 32)
+    # serial reference run (also the timing baseline)
+    _, tasks = build()
+    serial_run = make_scheduler("serial", window=window)
+    serial_warm = serial_run(tasks)  # warm jit caches
+    snap, tasks = build()
+    t0 = time.perf_counter()
+    serial_report = serial_run(tasks)
+    base = time.perf_counter() - t0
+    ref = _snapshot(snap)
+    emit(name, "tasks", len(tasks))
+    emit(name, "serial_wall_s", round(base, 4))
+    emit(name, "serial_dispatches", _per_run(serial_report, serial_warm, "dispatches"))
+    emit(name, "serial_active_fraction", round(serial_report.occupancy_proxy(), 3))
+
+    # device is handled by the plan-mode loop below, not as a host policy
+    policies = [p for p in chosen_policies(HOST_POLICIES)
+                if p not in ("serial", "device")]
+    for pol in policies:
+        run = make_scheduler(pol, window=window)
+        _, warm_tasks = build()
+        warm_report = run(warm_tasks)
+        snap, tasks = build()
+        t0 = time.perf_counter()
+        report = run(tasks)
+        wall = time.perf_counter() - t0
+        emit(name, f"{pol}_wall_s", round(wall, 4))
+        emit(name, f"{pol}_speedup", round(base / wall, 3))
+        emit(name, f"{pol}_dispatches", _per_run(report, warm_report, "dispatches"))
+        emit(name, f"{pol}_active_fraction", round(report.occupancy_proxy(), 3))
+        emit(name, f"{pol}_matches_serial", int(np.array_equal(_snapshot(snap), ref)))
+
+    if "device" not in chosen_policies(("device",)):
+        return
+    for mode in DEVICE_MODES:
+        runner = DeviceWindowRunner(window_size=window, plan_mode=mode)
+        _, warm_tasks = build()
+        runner.run(warm_tasks)  # compile the lowered program
+        snap, tasks = build()
+        t0 = time.perf_counter()
+        report = runner.run(tasks)
+        wall = time.perf_counter() - t0
+        pol = f"device_{mode}"
+        emit(name, f"{pol}_wall_s", round(wall, 4))
+        emit(name, f"{pol}_speedup", round(base / wall, 3))
+        emit(name, f"{pol}_dispatches", report.exec_stats["dispatches"])
+        emit(name, f"{pol}_active_fraction", round(report.plan_active_fraction, 3))
+        emit(name, f"{pol}_matches_serial", int(np.array_equal(_snapshot(snap), ref)))
+        emit(name, f"{pol}_plan_steps", report.arena_stats["device_steps"])
+        emit(name, f"{pol}_shape_classes", report.arena_stats["n_classes"])
+        emit(name, f"{pol}_padding_waste", report.arena_stats["total_waste_frac"])
+        if mode == DEVICE_MODES[0]:  # arena layout is plan-mode independent
+            for label, entry in sorted(report.arena_stats["per_class"].items()):
+                emit(name, f"waste_{label.replace(',', ';').replace(' ', '')}",
+                     entry["waste_frac"])
+
+
+def main() -> None:
+    for name, build in (_sim_leg(), _dyn_leg()):
+        compare(name, build)
+
+
+if __name__ == "__main__":
+    main()

@@ -38,7 +38,7 @@ from repro.core import AsyncFrontierScheduler, TaskStream
 from repro.core.device_dispatch import plan_active_fraction, plan_frontier, plan_waves
 from repro.sim import ENVIRONMENTS, PhysicsEngine
 
-from .common import emit, make_scheduler, opt, wall
+from .common import emit, make_scheduler, opt, smoke, wall
 
 SIM_ENVS = ("cheetah", "ant")
 STEPS = 3
@@ -46,11 +46,16 @@ N_ENVS, GROUP = 16, 4
 DYN_NETS = ("instanas", "dynamic_routing")
 
 
+def _sim_size():
+    return (4, 2, 1) if smoke() else (N_ENVS, GROUP, STEPS)
+
+
 def sim_tasks(env: str, seed: int):
-    eng = PhysicsEngine(ENVIRONMENTS[env], n_envs=N_ENVS, group_size=GROUP,
+    n_envs, group, steps = _sim_size()
+    eng = PhysicsEngine(ENVIRONMENTS[env], n_envs=n_envs, group_size=group,
                         seed=seed)
     stream = TaskStream()
-    eng.emit_batch(stream, STEPS)
+    eng.emit_batch(stream, steps)
     return stream.tasks
 
 
@@ -66,6 +71,8 @@ def dyn_tasks(name: str, input_seed: int, params):
 
 
 def compare(name: str, build, warm_seeds=(0,), fresh_seeds=(10, 11, 12, 13)) -> None:
+    if smoke():
+        fresh_seeds = fresh_seeds[:2]
     window = opt("window", 32)
     # Persistent scheduler objects (compile caches live across streams, as a
     # long-running runtime's would); the frontier's is kept explicit so its
@@ -127,13 +134,15 @@ def device_plan_density(name: str, tasks) -> None:
 
 
 def main() -> None:
-    for env in SIM_ENVS:
+    sim_envs = SIM_ENVS[:1] if smoke() else SIM_ENVS
+    dyn_nets = DYN_NETS[-1:] if smoke() else DYN_NETS
+    for env in sim_envs:
         compare(f"frontier_sim_{env}", lambda s, e=env: sim_tasks(e, s))
         device_plan_density(f"frontier_sim_{env}", sim_tasks(env, 3))
 
     from repro.dyn import WORKLOADS
 
-    for net in DYN_NETS:
+    for net in dyn_nets:
         init_fn = WORKLOADS[net][0]
         params = init_fn(0)
         compare(f"frontier_dyn_{net}",

@@ -13,7 +13,9 @@ import numpy as np
 
 from repro.core import (
     AsyncFrontierScheduler,
+    PLAN_MODES,
     RTX3060_LIKE,
+    SCHEDULER_NAMES,
     TaskStream,
     ThreadedStreamScheduler,
     WaveScheduler,
@@ -31,20 +33,49 @@ def emit(name: str, metric: str, value) -> None:
 # -- scheduler selection (shared by bench_frontier and the run.py CLI) -----
 #
 # ``OPTIONS`` holds run-wide flag overrides parsed by ``run.py``
-# (e.g. ``--window=16 --streams=8 --inflight=4``); benches read them via
-# ``opt()`` so one CLI tunes every section consistently.
+# (e.g. ``--window=16 --streams=8 --inflight=4 --plan-mode=frontier``);
+# benches read them via ``opt()``/``choice()`` so one CLI tunes every
+# section consistently.
 OPTIONS: Dict[str, str] = {}
 
-# CLI flag keys run.py accepts; each maps --<flag>=N onto make_scheduler.
+# CLI flag keys run.py accepts; each --<flag>=N maps onto make_scheduler.
 FLAG_KEYS = ("window", "streams", "inflight")
+
+# String-valued flags with a fixed vocabulary, validated by run.py:
+#   --plan-mode  selects the device runner's plan lowering (DESIGN §2 A3);
+#   --scheduler  restricts comparison sections to serial + one policy.
+CHOICE_FLAGS: Dict[str, Sequence[str]] = {
+    "plan-mode": PLAN_MODES,
+    "scheduler": SCHEDULER_NAMES,
+}
 
 
 def opt(key: str, default: int) -> int:
     return int(OPTIONS.get(key, default))
 
 
+def choice(key: str, default: str) -> str:
+    return OPTIONS.get(key, default)
+
+
+def smoke() -> bool:
+    """True under ``run.py --smoke``: sections shrink to CI-sized inputs
+    (plan-lowering and scheduler-API regressions should fail in CI, not at
+    bench time)."""
+    return OPTIONS.get("smoke") == "1"
+
+
+def chosen_policies(default: Sequence[str]) -> List[str]:
+    """Comparison sections honor ``--scheduler=NAME`` by shrinking their
+    policy set to the serial baseline + the named policy."""
+    sel = OPTIONS.get("scheduler")
+    if sel is None:
+        return list(default)
+    return ["serial"] + ([sel] if sel != "serial" else [])
+
+
 def make_scheduler(name: str, window: int = 32, num_streams: int = 4,
-                   max_inflight: int = 8):
+                   max_inflight: int = 8, plan_mode: str = "wave"):
     """repro.core.make_scheduler with CLI flag overrides applied."""
     from repro.core import make_scheduler as core_make_scheduler
 
@@ -53,6 +84,7 @@ def make_scheduler(name: str, window: int = 32, num_streams: int = 4,
         window_size=opt("window", window),
         num_streams=opt("streams", num_streams),
         max_inflight=opt("inflight", max_inflight),
+        plan_mode=choice("plan-mode", plan_mode),
     )
 
 

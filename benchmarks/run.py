@@ -2,9 +2,13 @@
 Prints ``name,metric,value`` CSV. Usage:
     PYTHONPATH=src python -m benchmarks.run [--flag=value ...] [section ...]
 
-Flags (consumed by sections via common.opt): --window=N sets the ACS
-window size, --streams=K the thread count for the threaded scheduler,
---inflight=M the frontier scheduler's in-flight group cap.
+Flags (consumed by sections via benchmarks.common):
+  --window=N       ACS window size
+  --streams=K      thread count for the threaded scheduler
+  --inflight=M     frontier scheduler's in-flight group cap
+  --plan-mode=P    device runner plan lowering: wave | frontier
+  --scheduler=S    restrict comparison sections to serial + S
+  --smoke          CI-sized inputs; defaults to the plan-lowering sections
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ import time
 from . import (
     bench_dag_overhead,
     bench_depcheck,
+    bench_device,
     bench_dynamic_dnn,
     bench_frontier,
     bench_moe_waves,
@@ -37,22 +42,43 @@ SECTIONS = {
     "window_size": bench_window_size,    # Fig 29
     "moe_waves": bench_moe_waves,        # beyond-paper (DESIGN §4)
     "frontier": bench_frontier,          # beyond-paper (DESIGN §9)
+    "device": bench_device,              # ACS-HW analogue (DESIGN §2 A3)
 }
+
+# The sections --smoke runs when none are named: the ones exercising plan
+# lowering and the unified scheduler API (regressions there should fail in
+# CI, not at bench time).
+SMOKE_SECTIONS = ("device", "frontier")
 
 
 def main() -> None:
     chosen = []
     for arg in sys.argv[1:]:
-        if arg.startswith("--") and "=" in arg:
+        if arg == "--smoke":
+            common.OPTIONS["smoke"] = "1"
+        elif arg.startswith("--") and "=" in arg:
             key, _, value = arg[2:].partition("=")
-            if key not in common.FLAG_KEYS:
+            if key in common.FLAG_KEYS:
+                if not value.isdigit() or int(value) < 1:
+                    raise SystemExit(f"--{key} expects a positive integer, got {value!r}")
+            elif key in common.CHOICE_FLAGS:
+                allowed = common.CHOICE_FLAGS[key]
+                if value not in allowed:
+                    raise SystemExit(
+                        f"--{key} expects one of {{{', '.join(allowed)}}}, got {value!r}"
+                    )
+            else:
+                flags = [f"--{k}=N" for k in common.FLAG_KEYS]
+                flags += [f"--{k}={{{'|'.join(v)}}}" for k, v in common.CHOICE_FLAGS.items()]
                 raise SystemExit(
-                    f"unknown flag --{key}; choose from: "
-                    + ", ".join(f"--{k}=N" for k in common.FLAG_KEYS)
+                    f"unknown flag --{key}; choose from: " + ", ".join(flags + ["--smoke"])
                 )
-            if not value.isdigit() or int(value) < 1:
-                raise SystemExit(f"--{key} expects a positive integer, got {value!r}")
             common.OPTIONS[key] = value
+        elif arg.startswith("--"):
+            raise SystemExit(
+                f"malformed flag {arg!r}: flags take --name=value form "
+                "(e.g. --scheduler=frontier); --smoke is the only bare flag"
+            )
         else:
             chosen.append(arg)
     unknown = [n for n in chosen if n not in SECTIONS]
@@ -60,7 +86,8 @@ def main() -> None:
         raise SystemExit(
             f"unknown section(s) {unknown}; choose from: {', '.join(SECTIONS)}"
         )
-    chosen = chosen or list(SECTIONS)
+    if not chosen:
+        chosen = list(SMOKE_SECTIONS) if common.smoke() else list(SECTIONS)
     print("section,metric,value")
     for name in chosen:
         mod = SECTIONS[name]

@@ -5,8 +5,10 @@ simulation stream scheduled by the ACS window, exactly as §VI-A.
 
     PYTHONPATH=src python examples/physics_rl.py [env] [steps] [scheduler]
 
-``scheduler`` is one of serial | wave | threaded | frontier (default
-wave; see ``repro.core.SCHEDULER_NAMES``). Each RL step emits a fresh,
+``scheduler`` is one of serial | wave | threaded | frontier | device
+(default wave; see ``repro.core.SCHEDULER_NAMES``; ``device`` is the
+ACS-HW analogue — the whole step's stream in ONE dispatch through the
+slab arena). Each RL step emits a fresh,
 input-dependent kernel graph, so this is the frontier scheduler's home
 turf: per-kernel compile caches carry across steps while wave-shaped
 caches keep missing.

@@ -1,9 +1,17 @@
 """repro.core — ACS: windowed out-of-order kernel scheduling (the paper's
 contribution), adapted to TPU/JAX. See DESIGN.md §2 for the mapping."""
 
+from .arena import ArenaAddress, ShapeClass, SlabArena, pad_shape
 from .buffers import Buffer, BufferPool, BufferView
 from .dag_baseline import DagRunner, build_full_dag, level_schedule
-from .device_dispatch import DeviceOpRegistry, DeviceWindowRunner, plan_waves
+from .device_dispatch import (
+    DeviceOpRegistry,
+    DeviceWindowRunner,
+    lower_plan,
+    plan_active_fraction,
+    plan_frontier,
+    plan_waves,
+)
 from .executors import FusedWaveExecutor, GroupExecutor, SerialExecutor
 from .frontier import AsyncFrontierScheduler, DispatchQueue
 from .perfmodel import (
@@ -15,6 +23,7 @@ from .perfmodel import (
 )
 from .scheduler import (
     GroupTrace,
+    PLAN_MODES,
     SCHEDULER_NAMES,
     SchedulerReport,
     ThreadedStreamScheduler,
@@ -23,7 +32,7 @@ from .scheduler import (
     run_serial,
 )
 from .segments import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
-from .task import Task, operand_dtype, operand_shape
+from .task import Task, operand_base, operand_dtype, operand_shape
 from .window import SchedulingWindow, TaskState
 from .wrapper import KERNEL_REGISTRY, AcsKernel, TaskStream, acs_kernel
 
@@ -34,8 +43,15 @@ __all__ = [
     "DagRunner",
     "build_full_dag",
     "level_schedule",
+    "ArenaAddress",
+    "ShapeClass",
+    "SlabArena",
+    "pad_shape",
     "DeviceOpRegistry",
     "DeviceWindowRunner",
+    "lower_plan",
+    "plan_active_fraction",
+    "plan_frontier",
     "plan_waves",
     "FusedWaveExecutor",
     "GroupExecutor",
@@ -48,6 +64,7 @@ __all__ = [
     "TPU_V5E_CORE",
     "simulate",
     "GroupTrace",
+    "PLAN_MODES",
     "SCHEDULER_NAMES",
     "SchedulerReport",
     "ThreadedStreamScheduler",
@@ -60,6 +77,7 @@ __all__ = [
     "depends_on",
     "segments_overlap",
     "Task",
+    "operand_base",
     "operand_dtype",
     "operand_shape",
     "SchedulingWindow",

@@ -1,0 +1,226 @@
+"""Shape-class slab arena — the device-resident buffer image (DESIGN §2 A3).
+
+ACS-HW keeps the scheduling window *and* the kernels' operands next to the
+command processor so dispatch never round-trips to the host. Our device
+interpreter (`core/device_dispatch.py`) needs the same thing on TPU: every
+operand a lowered stream touches must live in a device-resident slab that
+dispatch tables can index with plain integers. The seed version supported
+exactly one uniform ``(D,)`` shape; the arena generalizes it to the real
+workloads:
+
+* Operands are grouped into **shape classes** ``(padded_shape, dtype)``;
+  the padded shape rounds the trailing dimension up to ``pad_multiple``
+  (8 by default — one TPU sublane; use 128 to model full lane padding).
+  Two buffers whose shapes pad to the same tuple share a class even when
+  their true shapes differ — the per-operand true shape is static in the
+  lowered program, so gathers slice the padding back off before compute.
+* Each class owns one **slab** ``[rows, *padded_shape]``; every
+  ``Buffer`` is assigned one row, and a row-``BufferView`` resolves to a
+  leading-axis sub-interval of its parent's row, so view aliasing (a
+  joint writing one row of a force buffer the integrator later reads in
+  full) behaves exactly like the virtual-address-range checks in
+  `core/buffers.py`. (The seed's dummy row is gone: arena steps are
+  fully active — no inactive slots needing a write sink.)
+* Padding is **accounted, not hidden**: ``padding_waste()`` reports, per
+  class, the row count and the fraction of slab cells occupied by padding
+  — the cost of running heterogeneous kernels through a uniform-indexed
+  arena, which benchmarks surface next to dispatch counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .buffers import Buffer, BufferView
+from .task import Operand, Task, operand_base
+
+__all__ = ["ShapeClass", "ArenaAddress", "SlabArena", "pad_shape"]
+
+
+def pad_shape(shape: Tuple[int, ...], pad_multiple: int) -> Tuple[int, ...]:
+    """Round the trailing dimension up to ``pad_multiple`` (scalars pass
+    through)."""
+    if not shape or pad_multiple <= 1:
+        return tuple(shape)
+    last = -(-shape[-1] // pad_multiple) * pad_multiple
+    return tuple(shape[:-1]) + (last,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeClass:
+    """One slab's identity: the padded shape every resident row shares."""
+
+    padded_shape: Tuple[int, ...]
+    dtype: str
+
+    @property
+    def row_elems(self) -> int:
+        return int(np.prod(self.padded_shape, dtype=np.int64)) if self.padded_shape else 1
+
+    @property
+    def label(self) -> str:
+        return f"{self.dtype}{list(self.padded_shape)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaAddress:
+    """Where one operand lives: ``slabs[class_id][row]``, optionally a
+    leading-axis sub-interval ``[row_start : row_start + row_count]`` when
+    the operand is a row view of its parent buffer."""
+
+    class_id: int
+    row: int
+    row_start: int = 0
+    row_count: int = 0  # 0 => the whole row (a full Buffer operand)
+
+    @property
+    def is_view(self) -> bool:
+        return self.row_count > 0
+
+
+class SlabArena:
+    """Assigns buffers to (class, row) slab coordinates and moves values
+    host<->device around a lowered stream's single dispatch."""
+
+    def __init__(self, pad_multiple: int = 8):
+        self.pad_multiple = pad_multiple
+        self._class_ids: Dict[ShapeClass, int] = {}
+        self._classes: List[ShapeClass] = []
+        self._rows: List[List[Buffer]] = []  # per class, row -> Buffer
+        # id(Buffer) -> (class, row); _rows holds the references, keeping
+        # the ids stable for the arena's lifetime.
+        self._addr: Dict[int, Tuple[int, int]] = {}
+
+    # -- classification ----------------------------------------------------
+    def class_of(self, buf: Buffer) -> ShapeClass:
+        return ShapeClass(
+            padded_shape=pad_shape(tuple(buf.shape), self.pad_multiple),
+            dtype=str(np.dtype(buf.dtype)),
+        )
+
+    def add(self, buf: Buffer) -> Tuple[int, int]:
+        """Assign ``buf`` a (class_id, row); idempotent per buffer object."""
+        key = id(buf)
+        if key in self._addr:
+            return self._addr[key]
+        cls = self.class_of(buf)
+        cid = self._class_ids.get(cls)
+        if cid is None:
+            cid = len(self._classes)
+            self._class_ids[cls] = cid
+            self._classes.append(cls)
+            self._rows.append([])
+        row = len(self._rows[cid])
+        self._rows[cid].append(buf)
+        self._addr[key] = (cid, row)
+        return cid, row
+
+    def add_tasks(self, tasks: Iterable[Task]) -> None:
+        for t in tasks:
+            for op in tuple(t.inputs) + tuple(t.outputs):
+                self.add(operand_base(op))
+
+    def address(self, op: Operand) -> ArenaAddress:
+        """Resolve an operand to its arena coordinates (adding the parent
+        buffer if unseen)."""
+        if isinstance(op, BufferView):
+            if op.row_start is None:
+                raise ValueError(
+                    f"arena operands must be Buffers or row views; {op.name!r} "
+                    "is a raw byte view (no row_start)"
+                )
+            cid, row = self.add(op.buffer)
+            return ArenaAddress(cid, row, op.row_start, op.row_count)
+        cid, row = self.add(op)
+        return ArenaAddress(cid, row)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def classes(self) -> List[ShapeClass]:
+        return list(self._classes)
+
+    def n_classes(self) -> int:
+        return len(self._classes)
+
+    def rows(self, class_id: int) -> List[Buffer]:
+        return list(self._rows[class_id])
+
+    def padding_waste(self) -> Dict[str, Dict[str, Any]]:
+        """Per-class occupancy: how many slab cells hold real values vs
+        trailing-dimension padding."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for cid, cls in enumerate(self._classes):
+            bufs = self._rows[cid]
+            padded = cls.row_elems
+            used = sum(
+                int(np.prod(b.shape, dtype=np.int64)) if b.shape else 1 for b in bufs
+            )
+            total = padded * len(bufs)
+            out[cls.label] = {
+                "rows": len(bufs),
+                "padded_elems_per_row": padded,
+                "used_elems": used,
+                "waste_frac": round(1.0 - used / total, 4) if total else 0.0,
+            }
+        return out
+
+    def total_waste_frac(self) -> float:
+        padded = used = 0
+        for cid, cls in enumerate(self._classes):
+            padded += cls.row_elems * len(self._rows[cid])
+            used += sum(
+                int(np.prod(b.shape, dtype=np.int64)) if b.shape else 1
+                for b in self._rows[cid]
+            )
+        return 1.0 - used / padded if padded else 0.0
+
+    # -- host <-> device movement ------------------------------------------
+    def _padded_value(self, buf: Buffer, cls: ShapeClass):
+        val = buf.value
+        if val is None:
+            # Not-yet-produced output: program order guarantees the
+            # producing step scatters before any consumer gathers.
+            return jnp.zeros(cls.padded_shape, dtype=np.dtype(cls.dtype))
+        val = jnp.asarray(val)
+        if tuple(val.shape) != tuple(buf.shape):
+            raise ValueError(
+                f"buffer {buf.name!r} declares shape {tuple(buf.shape)} but "
+                f"holds a value of shape {tuple(val.shape)}"
+            )
+        if tuple(val.shape) == cls.padded_shape:
+            return val
+        pads = [(0, p - s) for s, p in zip(val.shape, cls.padded_shape)]
+        return jnp.pad(val, pads)
+
+    def pack(self) -> List[Any]:
+        """One device array per class: ``[rows, *padded_shape]``. Every
+        row is addressable by some operand — no scratch row (all lowered
+        steps are fully active)."""
+        slabs = []
+        for cid, cls in enumerate(self._classes):
+            dtype = np.dtype(cls.dtype)
+            rows = [self._padded_value(b, cls) for b in self._rows[cid]]
+            slabs.append(jnp.stack(rows).astype(dtype))
+        return slabs
+
+    def unpack(self, slabs: Sequence[Any],
+               only: Optional[Iterable[Buffer]] = None) -> None:
+        """Write slab rows back into buffer values, slicing padding off.
+
+        ``only`` restricts writeback to the given buffers (e.g. the ones
+        some task actually wrote); default writes every resident row.
+        """
+        wanted = None if only is None else {id(b) for b in only}
+        for cid, cls in enumerate(self._classes):
+            slab = slabs[cid]
+            for row, buf in enumerate(self._rows[cid]):
+                if wanted is not None and id(buf) not in wanted:
+                    continue
+                val = slab[row]
+                if tuple(buf.shape) != cls.padded_shape:
+                    val = val[tuple(slice(0, s) for s in buf.shape)]
+                buf.value = val

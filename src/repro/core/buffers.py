@@ -147,6 +147,12 @@ class BufferPool:
         arr_np_dtype = np.dtype(str(arr.dtype)) if hasattr(arr, "dtype") else np.dtype(np.float32)
         return self.alloc(tuple(arr.shape), arr_np_dtype, name=name, value=arr)
 
+    def buffers(self) -> Tuple[Buffer, ...]:
+        """All live allocations, in allocation order (the slab arena and
+        the device runner enumerate a pool's buffers through this)."""
+        with self._lock:
+            return tuple(self._buffers.values())
+
     def __getitem__(self, name: str) -> Buffer:
         return self._buffers[name]
 

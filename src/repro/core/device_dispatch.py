@@ -6,38 +6,45 @@ CPU. A TPU has no command processor we can extend, so the TPU-idiomatic
 equivalent is a *device-resident window interpreter*:
 
 1. The host runs the (cheap, windowed) dependency analysis ONCE per stream
-   and emits a **wave plan**: dense int32 tables
-   ``opcode[wave, slot]``, ``in0/in1/in2[wave, slot]``, ``out[wave, slot]``
-   over a slab of uniform-shaped buffers — the moral equivalent of the
-   upstream-id SRAM tables of Fig 20.
-2. A single compiled program ``lax.scan``s over waves; within a wave every
-   slot evaluates ``lax.switch(opcode)(slab[in0], slab[in1], slab[in2])``
-   (vmapped — slots in a wave are independent by construction) and
-   scatters results back into the slab. Inactive slots write to a dummy
-   row.
+   and emits a plan (wave-synchronous or frontier-grouped — `plan_waves` /
+   `plan_frontier`), then lowers it over a **shape-class slab arena**
+   (`core/arena.py`): every step is one homogeneous task group with a
+   static ``(opcode, arity, input/output shape classes)`` spec plus dense
+   int32 row tables — the moral equivalent of the upstream-id SRAM tables
+   of Fig 20, generalized from one uniform ``(D,)`` shape to the real
+   sim/dyn workloads (mixed shapes and dtypes, variable arity, row-view
+   aliasing, multi-output tasks).
+2. A single compiled program walks the steps (runs of identical step specs
+   are compressed into ``lax.scan``s), gathering operand rows from the
+   per-class slabs (cross-class gathers — inputs and outputs of one step
+   may live in different slabs), applying the step's kernel (vmapped over
+   the group), and scattering results back.
 
 Host involvement: ONE dispatch for the whole stream — vs one per kernel
 (serial) or one per wave (ACS-SW). This is exactly the communication
-reduction ACS-HW claims, realized with jax.lax control flow instead of
-SRAM next to a command processor.
+reduction ACS-HW claims, realized with jax control flow instead of SRAM
+next to a command processor.
 
-Constraint (like the paper's HW window): operands must share one padded
-shape ``(D,)`` and opcodes must come from a fixed registry. The sim/ and
-dyn/ workloads satisfy this by padding (their kernels are small, so slab
-padding waste is bounded and reported).
+The seed's uniform-shape interpreter survives as the *legacy path*
+(`compile_wave_plan` + `DeviceWindowRunner.execute_uniform`): operands
+must share one padded shape ``(D,)``, opcodes must be arity-<=3 registry
+branches. It now refuses over-arity tasks loudly instead of silently
+truncating operand lists.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .arena import SlabArena
 from .scheduler import SchedulerReport
-from .task import Task, operand_shape
+from .task import Task, operand_base, operand_shape
 from .window import SchedulingWindow
 
 __all__ = [
@@ -45,42 +52,110 @@ __all__ = [
     "compile_wave_plan",
     "plan_waves",
     "plan_frontier",
+    "plan_active_fraction",
+    "lower_plan",
+    "DeviceStep",
     "DeviceWindowRunner",
 ]
 
-MAX_ARITY = 3
+MAX_ARITY = 3  # legacy uniform-slab path only; the arena path has no limit
 
 
 class DeviceOpRegistry:
-    """Fixed opcode table for the device interpreter (uniform arity)."""
+    """The device interpreter's fixed opcode table (the paper's HW window
+    supports a finite kernel set burned in next to the command processor).
 
-    def __init__(self) -> None:
-        self._ops: List[Tuple[str, Callable]] = []
+    ``register`` assigns each kernel name a stable opcode. ``strict``
+    registries refuse to lower tasks whose opcode was never registered —
+    the faithful HW behaviour; non-strict registries auto-register on
+    first sight (the software-managed table `make_scheduler("device")`
+    uses, so any workload runs out of the box). During lowering the
+    registry also records which shape classes each opcode was dispatched
+    over (``classes_seen``) — the per-class registration benchmarks print.
+    """
+
+    def __init__(self, strict: bool = True) -> None:
+        self._ops: List[Tuple[str, Optional[Callable]]] = []
         self._index: Dict[str, int] = {}
+        self.strict = strict
+        # opcode name -> set of (input class labels, output class labels)
+        self.classes_seen: Dict[str, set] = {}
 
-    def register(self, name: str, fn: Callable) -> int:
-        """``fn(x, y, z) -> out`` over uniform ``(D,)`` operands; unused
-        operands receive the dummy row."""
-        if name in self._index:
-            return self._index[name]
+    def register(self, name: str, fn: Optional[Callable] = None) -> int:
+        """Register ``name`` (idempotent). ``fn`` is the legacy uniform-path
+        branch ``fn(x, y, z) -> out``; the arena path executes each task
+        group's own wrapper-resolved callable and ignores it.
+
+        Re-registering a known name upgrades an fn-less entry with the
+        supplied branch fn; supplying a *different* fn for a name that
+        already has one is a conflict and raises."""
+        idx = self._index.get(name)
+        if idx is not None:
+            stored = self._ops[idx][1]
+            if fn is not None:
+                if stored is None:
+                    self._ops[idx] = (name, fn)
+                elif stored is not fn:
+                    raise ValueError(
+                        f"opcode {name!r} already registered with a different "
+                        "branch fn; device opcodes are fixed per registry"
+                    )
+            return idx
         idx = len(self._ops)
         self._ops.append((name, fn))
         self._index[name] = idx
         return idx
 
     def opcode(self, name: str) -> int:
-        return self._index[name]
+        idx = self._index.get(name)
+        if idx is None:
+            if not self.strict:
+                return self.register(name)
+            raise KeyError(
+                f"opcode {name!r} is not in the device registry "
+                f"(registered: {sorted(self._index) or 'none'}); register it "
+                "or build the runner with an auto-registering registry"
+            )
+        return idx
+
+    def note_classes(self, name: str, in_labels: Tuple[str, ...],
+                     out_labels: Tuple[str, ...]) -> None:
+        self.classes_seen.setdefault(name, set()).add((in_labels, out_labels))
 
     @property
     def branches(self) -> List[Callable]:
+        """Legacy uniform-path branch table (registration order). Opcode
+        ints index this list inside ``lax.switch``, so every registered
+        name must carry a branch fn to use the uniform interpreter."""
+        missing = [n for n, fn in self._ops if fn is None]
+        if missing:
+            raise ValueError(
+                "legacy uniform path needs an fn(x, y, z) branch for every "
+                f"registered opcode; missing: {missing} (real kernels are "
+                "registered fn-less — run them through the arena path)"
+            )
         return [fn for _, fn in self._ops]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._index
 
     def __len__(self) -> int:
         return len(self._ops)
 
 
-def plan_waves(tasks: Sequence[Task], window_size: int = 32) -> List[List[Task]]:
-    """Run the windowed scheduler symbolically to obtain the wave plan."""
+# ---------------------------------------------------------------------------
+# Planning: run the windowed scheduler symbolically (no execution)
+# ---------------------------------------------------------------------------
+
+def plan_waves(tasks: Sequence[Task], window_size: int = 32,
+               return_window: bool = False):
+    """Run the windowed scheduler symbolically to obtain the wave plan.
+
+    With ``return_window=True`` also returns the planning
+    :class:`SchedulingWindow`, whose stats (dep checks, occupancy) are the
+    real numbers behind the plan — the runner reports them instead of a
+    fresh all-zero window.
+    """
     window = SchedulingWindow(window_size)
     window.submit_all(tasks)
     waves: List[List[Task]] = []
@@ -92,22 +167,21 @@ def plan_waves(tasks: Sequence[Task], window_size: int = 32) -> List[List[Task]]
             window.mark_executing(t)
         waves.append(ready)
         window.retire_many(ready)
-    return waves
+    return (waves, window) if return_window else waves
 
 
 def plan_frontier(
-    tasks: Sequence[Task], window_size: int = 32, max_group: Optional[int] = None
-) -> List[List[Task]]:
+    tasks: Sequence[Task], window_size: int = 32, max_group: Optional[int] = None,
+    return_window: bool = False,
+):
     """Frontier-plan mode: one homogeneous group per device step.
 
-    Wave planning retires an entire front per scan step, so every step is
+    Wave planning retires an entire front per step, so every step is
     padded to the *widest wave* and a slow-to-unblock kernel stretches the
     whole table. The frontier plan instead retires one homogeneous group at
     a time, re-collecting the READY set between groups — newly unblocked
     kernels join the very next step rather than waiting out the front.
-    Steps are narrower but denser (higher active-slot fraction), which is
-    what the ``lax.scan`` interpreter pays for: inactive slots still
-    evaluate ``lax.switch`` against the dummy row.
+    Steps are narrower but denser (higher active-slot fraction).
     """
     from .executors import group_by_signature
 
@@ -125,7 +199,7 @@ def plan_frontier(
             window.mark_executing(t)
         window.retire_many(group)
         groups.append(group)
-    return groups
+    return (groups, window) if return_window else groups
 
 
 def plan_active_fraction(plan: Sequence[Sequence[Task]]) -> float:
@@ -137,13 +211,22 @@ def plan_active_fraction(plan: Sequence[Sequence[Task]]) -> float:
     return sum(len(step) for step in plan) / (len(plan) * max_w)
 
 
+# ---------------------------------------------------------------------------
+# Legacy lowering: one uniform (D,) shape class, arity <= 3
+# ---------------------------------------------------------------------------
+
 def compile_wave_plan(
     waves: Sequence[Sequence[Task]],
     registry: DeviceOpRegistry,
     buffer_index: Dict[str, int],
     n_rows: int,
 ) -> Dict[str, np.ndarray]:
-    """Lower a wave schedule to dense dispatch tables (the 'SRAM' image)."""
+    """Lower a wave schedule to dense dispatch tables (the 'SRAM' image).
+
+    Legacy single-class path: every operand indexes one uniform slab and
+    arity is capped at ``MAX_ARITY``. Over-arity tasks are an error here —
+    the arena path (`lower_plan`) is the one without the limit.
+    """
     n_waves = len(waves)
     max_w = max((len(w) for w in waves), default=1)
     dummy = n_rows  # slab has one extra scratch row
@@ -153,8 +236,22 @@ def compile_wave_plan(
     active = np.zeros((n_waves, max_w), dtype=bool)
     for wi, wave in enumerate(waves):
         for si, task in enumerate(wave):
+            if len(task.inputs) > MAX_ARITY:
+                raise ValueError(
+                    f"task {task.opcode}#{task.tid} has {len(task.inputs)} "
+                    f"operands but the legacy uniform-slab path supports at "
+                    f"most {MAX_ARITY}; use the arena path "
+                    "(DeviceWindowRunner.execute) for variable arity"
+                )
+            if len(task.outputs) != 1:
+                raise ValueError(
+                    f"task {task.opcode}#{task.tid} has {len(task.outputs)} "
+                    "outputs but the legacy uniform-slab path supports "
+                    "exactly one; use the arena path "
+                    "(DeviceWindowRunner.execute) for multi-output tasks"
+                )
             opc[wi, si] = registry.opcode(task.opcode)
-            for ai, op in enumerate(task.inputs[:MAX_ARITY]):
+            for ai, op in enumerate(task.inputs):
                 ins[wi, si, ai] = buffer_index[op.buffer.name if hasattr(op, "buffer") else op.name]
             outs[wi, si] = buffer_index[
                 task.outputs[0].buffer.name if hasattr(task.outputs[0], "buffer") else task.outputs[0].name
@@ -163,26 +260,393 @@ def compile_wave_plan(
     return {"opcode": opc, "ins": ins, "outs": outs, "active": active}
 
 
+# ---------------------------------------------------------------------------
+# Arena lowering: per-class tables, variable arity, multi-output, views
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _OperandSpec:
+    """Static half of one operand column (shared by the whole group)."""
+
+    class_id: int
+    true_shape: Tuple[int, ...]
+    is_view: bool
+    view_rows: int  # leading-axis rows covered when is_view
+
+
+@dataclasses.dataclass(frozen=True)
+class _StepSpec:
+    """Static half of one device step: what gets compiled."""
+
+    opcode: int
+    width: int
+    inputs: Tuple[_OperandSpec, ...]
+    outputs: Tuple[_OperandSpec, ...]
+    signature: Tuple  # group Task.signature — compile-cache identity
+
+
+@dataclasses.dataclass
+class DeviceStep:
+    """One lowered step: one homogeneous task group, dense row tables.
+
+    ``in_rows``/``out_rows`` are ``[n_operands, width]`` int32 slab row
+    ids; ``*_starts`` carry the leading-axis offset for view operands
+    (zero otherwise). The spec (opcode, width, shape classes) is static —
+    identical specs across streams reuse one compiled program.
+    """
+
+    spec: _StepSpec
+    fn: Callable
+    in_rows: np.ndarray
+    in_starts: np.ndarray
+    out_rows: np.ndarray
+    out_starts: np.ndarray
+    tids: Tuple[int, ...]
+
+    def tables(self) -> Dict[str, np.ndarray]:
+        return {
+            "in_rows": self.in_rows, "in_starts": self.in_starts,
+            "out_rows": self.out_rows, "out_starts": self.out_starts,
+        }
+
+
+def _operand_spec(arena: SlabArena, op) -> Tuple[_OperandSpec, int, int]:
+    """Returns (static spec, row, start) for one operand occurrence."""
+    addr = arena.address(op)
+    return (
+        _OperandSpec(
+            class_id=addr.class_id,
+            true_shape=tuple(operand_shape(op)),
+            is_view=addr.is_view,
+            view_rows=addr.row_count if addr.is_view else 0,
+        ),
+        addr.row,
+        addr.row_start,
+    )
+
+
+def _lowering_groups(wave: Sequence[Task], arena: SlabArena) -> List[List[Task]]:
+    """Partition one plan step into arena-homogeneous groups, oldest-first.
+
+    ``Task.signature`` alone is NOT enough here: it encodes operand value
+    shapes, so a full ``(2, 4)`` buffer and a 2-row view of an ``(8, 4)``
+    buffer are signature-equal (host executors batch them fine — they are
+    value-based) yet need different gather/scatter code. The grouping key
+    therefore also carries each operand's static arena addressing
+    (class id, view-ness, view extent)."""
+
+    def opkey(op):
+        addr = arena.address(op)
+        return (addr.class_id, addr.is_view, addr.row_count)
+
+    groups: Dict[Tuple, List[Task]] = {}
+    order: List[Tuple] = []
+    for t in wave:
+        key = (
+            t.signature,
+            tuple(opkey(o) for o in t.inputs),
+            tuple(opkey(o) for o in t.outputs),
+        )
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(t)
+    return [groups[k] for k in order]
+
+
+def lower_plan(
+    plan: Sequence[Sequence[Task]],
+    registry: DeviceOpRegistry,
+    arena: SlabArena,
+) -> List[DeviceStep]:
+    """Lower a wave/frontier plan to arena-addressed device steps.
+
+    Shared by both plan modes: each plan step (a wave, or an already
+    homogeneous frontier group) is partitioned into arena-homogeneous
+    groups (`_lowering_groups` — signature plus static arena addressing;
+    tasks within a plan step are independent by construction, so sub-step
+    order is free) and each group becomes one :class:`DeviceStep` with
+    static (opcode, arity, shape classes) and dense per-operand row
+    tables.
+    """
+    steps: List[DeviceStep] = []
+    for wave in plan:
+        for group in _lowering_groups(wave, arena):
+            head = group[0]
+            opcode = registry.opcode(head.opcode)
+            n_in, n_out = len(head.inputs), len(head.outputs)
+            width = len(group)
+            in_specs: List[_OperandSpec] = []
+            out_specs: List[_OperandSpec] = []
+            in_rows = np.zeros((n_in, width), np.int32)
+            in_starts = np.zeros((n_in, width), np.int32)
+            out_rows = np.zeros((n_out, width), np.int32)
+            out_starts = np.zeros((n_out, width), np.int32)
+            for gi, task in enumerate(group):
+                for i, op in enumerate(task.inputs):
+                    spec, row, start = _operand_spec(arena, op)
+                    in_rows[i, gi], in_starts[i, gi] = row, start
+                    if gi == 0:
+                        in_specs.append(spec)
+                for o, op in enumerate(task.outputs):
+                    spec, row, start = _operand_spec(arena, op)
+                    out_rows[o, gi], out_starts[o, gi] = row, start
+                    if gi == 0:
+                        out_specs.append(spec)
+            labels = tuple(arena.classes[s.class_id].label for s in in_specs)
+            out_labels = tuple(arena.classes[s.class_id].label for s in out_specs)
+            registry.note_classes(head.opcode, labels, out_labels)
+            steps.append(
+                DeviceStep(
+                    spec=_StepSpec(opcode, width, tuple(in_specs),
+                                   tuple(out_specs), head.signature),
+                    fn=head.fn,
+                    in_rows=in_rows, in_starts=in_starts,
+                    out_rows=out_rows, out_starts=out_starts,
+                    tids=tuple(t.tid for t in group),
+                )
+            )
+    return steps
+
+
+def _gather_operand(slabs, spec: _OperandSpec, rows, starts, width: int):
+    """Gather one operand column: ``[width, *true_shape]`` (or unbatched
+    when width == 1)."""
+    slab = slabs[spec.class_id]
+    if spec.is_view:
+        rest = tuple(slab.shape[2:])  # padded row shape beyond the view axis
+        zeros = (0,) * len(rest)
+
+        def one(row, start):
+            return jax.lax.dynamic_slice(
+                slab[row], (start,) + zeros, (spec.view_rows,) + rest
+            )
+
+        vals = jax.vmap(one)(rows, starts) if width > 1 else one(rows[0], starts[0])
+    else:
+        vals = slab[rows] if width > 1 else slab[rows[0]]
+    trim = tuple(slice(0, s) for s in spec.true_shape)
+    if width > 1:
+        trim = (slice(None),) + trim
+    return vals[trim]
+
+
+def _pad_value(val, target_shape: Tuple[int, ...]):
+    if tuple(val.shape) == tuple(target_shape):
+        return val
+    pads = [(0, p - s) for s, p in zip(val.shape, target_shape)]
+    return jnp.pad(val, pads)
+
+
+def _scatter_operand(slabs, spec: _OperandSpec, rows, starts, width: int, val):
+    """Scatter one output column back into its class slab."""
+    slab = slabs[spec.class_id]
+    padded_row = tuple(slab.shape[1:])
+    if spec.is_view:
+        # A view write updates a sub-interval of its parent's row. Within a
+        # step two view writes may target the SAME parent row (disjoint
+        # intervals — overlap would be a WAW hazard and land in different
+        # steps), so the update must be sequential, not a vectorized
+        # scatter that would drop all but one update to a duplicated row.
+        target = (spec.view_rows,) + padded_row[1:]
+        zeros = (0,) * (len(padded_row) - 1)
+        for g in range(width):
+            v = _pad_value(val[g] if width > 1 else val, target)
+            row = rows[g]
+            updated = jax.lax.dynamic_update_slice(
+                slab[row], v.astype(slab.dtype), (starts[g],) + zeros
+            )
+            slab = slab.at[row].set(updated)
+    else:
+        if width > 1:
+            v = jax.vmap(lambda x: _pad_value(x, padded_row))(val)
+            slab = slab.at[rows].set(v.astype(slab.dtype))
+        else:
+            slab = slab.at[rows[0]].set(_pad_value(val, padded_row).astype(slab.dtype))
+    out = list(slabs)
+    out[spec.class_id] = slab
+    return out
+
+
+def _apply_step(slabs, spec: _StepSpec, fn: Callable, tables):
+    ins = [
+        _gather_operand(slabs, s, tables["in_rows"][i], tables["in_starts"][i],
+                        spec.width)
+        for i, s in enumerate(spec.inputs)
+    ]
+    out = jax.vmap(fn)(*ins) if spec.width > 1 else fn(*ins)
+    outs = tuple(out) if isinstance(out, (tuple, list)) else (out,)
+    if len(outs) != len(spec.outputs):
+        raise ValueError(
+            f"device step opcode {spec.opcode}: kernel returned {len(outs)} "
+            f"values for {len(spec.outputs)} outputs"
+        )
+    for o, s in enumerate(spec.outputs):
+        slabs = _scatter_operand(slabs, s, tables["out_rows"][o],
+                                 tables["out_starts"][o], spec.width, outs[o])
+    return slabs
+
+
+def _build_program(
+    steps: Sequence[DeviceStep],
+) -> Tuple[Callable, List[Tuple[_StepSpec, Callable, int]]]:
+    """Returns (jitted program, run segmentation). The program executes
+    every lowered step; the segmentation tells `_run_tables` how to stack
+    the per-step tables the program expects.
+
+    Runs of consecutive steps with an identical static spec (the recurring
+    structure of sim streams) collapse into a single ``lax.scan`` over
+    their stacked row tables, bounding trace size by the number of
+    *distinct* step specs in a run-length sense rather than total steps.
+    """
+    runs: List[Tuple[_StepSpec, Callable, int]] = []  # (spec, fn, run length)
+    for st in steps:
+        if runs and runs[-1][0] == st.spec:
+            spec, fn, n = runs[-1]
+            runs[-1] = (spec, fn, n + 1)
+        else:
+            runs.append((st.spec, st.fn, 1))
+
+    def run_program(slabs, run_tables):
+        slabs = list(slabs)
+        for (spec, fn, length), tables in zip(runs, run_tables):
+            if length == 1:
+                slabs = _apply_step(slabs, spec, fn, tables)
+            else:
+                def body(carry, tbl, _spec=spec, _fn=fn):
+                    return tuple(_apply_step(list(carry), _spec, _fn, tbl)), None
+
+                carry, _ = jax.lax.scan(body, tuple(slabs), tables)
+                slabs = list(carry)
+        return tuple(slabs)
+
+    return jax.jit(run_program), runs
+
+
+def _run_tables(steps: Sequence[DeviceStep],
+                runs: Sequence[Tuple[_StepSpec, Callable, int]]) -> List[Dict]:
+    """Stack each run's per-step tables: [T, n_operands, width] for scans,
+    plain [n_operands, width] for singleton runs."""
+    tables: List[Dict] = []
+    idx = 0
+    for _, _, length in runs:
+        chunk = steps[idx: idx + length]
+        idx += length
+        if length == 1:
+            tables.append({k: jnp.asarray(v) for k, v in chunk[0].tables().items()})
+        else:
+            tables.append({
+                k: jnp.asarray(np.stack([s.tables()[k] for s in chunk]))
+                for k in chunk[0].tables()
+            })
+    return tables
+
+
 class DeviceWindowRunner:
-    """Compile once, then execute entire task streams in ONE dispatch."""
+    """Compile once, then execute entire task streams in ONE dispatch.
+
+    The arena path (``execute`` / ``run``) handles the real workloads:
+    mixed shape classes, variable arity, multi-output tasks, row-view
+    aliasing. It conforms to the ``make_scheduler`` contract — ``run``
+    takes a task iterable and returns a :class:`SchedulerReport` whose
+    window stats come from the planning pass (the dependency checks that
+    actually happened), ``exec_stats.dispatches == 1`` per stream, and
+    arena occupancy lands in ``report.arena_stats``.
+    """
 
     def __init__(
         self,
-        registry: DeviceOpRegistry,
+        registry: Optional[DeviceOpRegistry] = None,
         window_size: int = 32,
         plan_mode: str = "wave",
         max_group: Optional[int] = None,
+        pad_multiple: int = 8,
     ):
         if plan_mode not in ("wave", "frontier"):
             raise ValueError(f"plan_mode must be 'wave' or 'frontier', got {plan_mode!r}")
-        self.registry = registry
+        self.registry = registry if registry is not None else DeviceOpRegistry(strict=False)
         self.window_size = window_size
         self.plan_mode = plan_mode
         self.max_group = max_group
-        self._compiled: Dict[Tuple, Callable] = {}
+        self.pad_multiple = pad_multiple
+        self._compiled: Dict[Tuple, Tuple[Callable, Any]] = {}
+        self._compiled_uniform: Dict[Tuple, Callable] = {}
         self.stats: Dict[str, Any] = {}
 
-    def _interpreter(self):
+    # -- shared planning ---------------------------------------------------
+    def _plan(self, tasks: Sequence[Task]):
+        if self.plan_mode == "frontier":
+            return plan_frontier(tasks, self.window_size, self.max_group,
+                                 return_window=True)
+        return plan_waves(tasks, self.window_size, return_window=True)
+
+    # -- arena path (the real workloads) -----------------------------------
+    def run(self, stream: Iterable[Task]) -> SchedulerReport:
+        """`make_scheduler` contract: task iterable in, report out."""
+        return self.execute(list(stream))
+
+    def execute(
+        self,
+        tasks: Sequence[Task],
+        buffers: Optional[Sequence] = None,
+    ) -> SchedulerReport:
+        from .executors import ExecStats
+
+        tasks = list(tasks)
+        t0 = time.perf_counter()
+        plan, window = self._plan(tasks)
+
+        arena = SlabArena(pad_multiple=self.pad_multiple)
+        if buffers is not None:
+            for b in buffers:
+                arena.add(b)
+        arena.add_tasks(tasks)
+        steps = lower_plan(plan, self.registry, arena)
+        plan_time = time.perf_counter() - t0
+
+        stats = ExecStats()
+        key = (
+            tuple(st.spec for st in steps),
+            tuple((c.padded_shape, c.dtype, len(arena.rows(i)))
+                  for i, c in enumerate(arena.classes)),
+        )
+        cached = self._compiled.get(key)
+        if cached is None:
+            cached = _build_program(steps)
+            self._compiled[key] = cached
+            stats.compiles += 1
+        run_fn, runs = cached
+
+        slabs = arena.pack()
+        tables = _run_tables(steps, runs)
+        t1 = time.perf_counter()
+        out_slabs = run_fn(tuple(slabs), tables)
+        jax.block_until_ready(out_slabs)
+        exec_time = time.perf_counter() - t1
+        written = [operand_base(op) for t in tasks for op in t.outputs]
+        arena.unpack(out_slabs, only=None if buffers is not None else written)
+
+        stats.dispatches = 1  # the whole stream was one launch
+        stats.tasks_run = len(tasks)
+        stats.wave_widths = [len(w) for w in plan]
+        stats.exec_seconds = exec_time
+        report = SchedulerReport(
+            window, stats, plan_time + exec_time,
+            [[t.tid for t in w] for w in plan],
+        )
+        report.plan_seconds = plan_time  # type: ignore[attr-defined]
+        report.plan_mode = self.plan_mode  # type: ignore[attr-defined]
+        report.plan_active_fraction = plan_active_fraction(plan)  # type: ignore[attr-defined]
+        report.arena_stats = {  # type: ignore[attr-defined]
+            "n_classes": arena.n_classes(),
+            "total_waste_frac": round(arena.total_waste_frac(), 4),
+            "per_class": arena.padding_waste(),
+            "device_steps": len(steps),
+        }
+        return report
+
+    # -- legacy uniform path (seed behaviour, kept for the toy universe) ---
+    def _uniform_interpreter(self):
         branches = self.registry.branches
 
         def step(slab, wave):
@@ -206,48 +670,48 @@ class DeviceWindowRunner:
 
         return run
 
-    def execute(
+    def execute_uniform(
         self,
         tasks: Sequence[Task],
         buffers: Sequence,  # core.buffers.Buffer, uniform padded shape (D,)
     ) -> SchedulerReport:
+        """The seed's single-shape-class interpreter (lax.switch over
+        registry branches, arity <= 3, single output). Kept as the legacy
+        reference; `execute` is the general path."""
+        from .executors import ExecStats
+
         t0 = time.perf_counter()
-        if self.plan_mode == "frontier":
-            waves = plan_frontier(tasks, self.window_size, self.max_group)
-        else:
-            waves = plan_waves(tasks, self.window_size)
+        plan, window = self._plan(tasks)
         plan_time = time.perf_counter() - t0
 
         buffer_index = {b.name: i for i, b in enumerate(buffers)}
         n_rows = len(buffers)
-        tables = compile_wave_plan(waves, self.registry, buffer_index, n_rows)
+        tables = compile_wave_plan(plan, self.registry, buffer_index, n_rows)
 
         d = int(buffers[0].shape[-1])
         key = (tables["opcode"].shape, d, len(self.registry))
-        run = self._compiled.get(key)
+        run = self._compiled_uniform.get(key)
         if run is None:
-            run = jax.jit(self._interpreter())
-            self._compiled[key] = run
-
-        slab = jnp.stack([jnp.asarray(b.value) for b in buffers] + [jnp.zeros((d,), dtype=buffers[0].value.dtype)])
-        plan = {k: jnp.asarray(v) for k, v in tables.items()}
+            run = jax.jit(self._uniform_interpreter())
+            self._compiled_uniform[key] = run
+        slab = jnp.stack([jnp.asarray(b.value) for b in buffers]
+                         + [jnp.zeros((d,), dtype=buffers[0].value.dtype)])
+        dev_plan = {k: jnp.asarray(v) for k, v in tables.items()}
         t1 = time.perf_counter()
-        slab = run(slab, plan)
+        slab = run(slab, dev_plan)
         slab.block_until_ready()
         exec_time = time.perf_counter() - t1
         for i, b in enumerate(buffers):
             b.value = slab[i]
 
-        window = SchedulingWindow(self.window_size)  # stats container
-        from .executors import ExecStats
-
         stats = ExecStats()
-        stats.dispatches = 1  # the whole stream was one launch
+        stats.dispatches = 1
         stats.tasks_run = len(tasks)
-        stats.wave_widths = [len(w) for w in waves]
+        stats.wave_widths = [len(w) for w in plan]
         stats.exec_seconds = exec_time
-        report = SchedulerReport(window, stats, plan_time + exec_time, [[t.tid for t in w] for w in waves])
+        report = SchedulerReport(window, stats, plan_time + exec_time,
+                                 [[t.tid for t in w] for w in plan])
         report.plan_seconds = plan_time  # type: ignore[attr-defined]
         report.plan_mode = self.plan_mode  # type: ignore[attr-defined]
-        report.plan_active_fraction = plan_active_fraction(waves)  # type: ignore[attr-defined]
+        report.plan_active_fraction = plan_active_fraction(plan)  # type: ignore[attr-defined]
         return report

@@ -225,5 +225,8 @@ class AsyncFrontierScheduler:
 
         ex.finalize()
         wall = time.perf_counter() - t0
-        ex.stats.exec_seconds = wall
+        # Accumulate like every other executor: the scheduler instance (and
+        # its ExecStats) persists across streams, so overwriting would pair
+        # last-run seconds with all-runs dispatch counters in deltas.
+        ex.stats.exec_seconds += wall
         return SchedulerReport(window, ex.stats, wall, waves, groups=traces)

@@ -36,6 +36,7 @@ __all__ = [
     "ThreadedStreamScheduler",
     "run_serial",
     "SCHEDULER_NAMES",
+    "PLAN_MODES",
     "make_scheduler",
 ]
 
@@ -223,16 +224,24 @@ def run_serial(stream: Iterable[Task]) -> SchedulerReport:
     return sched.run(stream)
 
 
-SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier")
+SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier", "device")
+PLAN_MODES = ("wave", "frontier")
 
 
 def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
-                   max_inflight: int = 8):
-    """Factory over the four ACS-SW execution policies; the single source
+                   max_inflight: int = 8, plan_mode: str = "wave"):
+    """Factory over the five ACS execution policies; the single source
     benchmarks and examples share. Returns a *persistent* scheduler's bound
     ``run`` (``tasks -> SchedulerReport``): compile caches — including the
-    serial baseline's per-signature jit cache — carry across streams, as a
-    long-running runtime's would."""
+    serial baseline's per-signature jit cache and the device runner's
+    lowered-program cache — carry across streams, as a long-running
+    runtime's would.
+
+    ``plan_mode`` selects the ACS-HW analogue's plan lowering (``"wave"``
+    or ``"frontier"``, DESIGN §2 A3) and only affects ``name="device"``.
+    """
+    if plan_mode not in PLAN_MODES:
+        raise ValueError(f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
     if name == "serial":
         return WaveScheduler(window_size=1, executor=SerialExecutor()).run
     if name == "wave":
@@ -245,4 +254,9 @@ def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
 
         return AsyncFrontierScheduler(window_size=window_size,
                                       max_inflight=max_inflight).run
+    if name == "device":
+        from .device_dispatch import DeviceWindowRunner
+
+        return DeviceWindowRunner(window_size=window_size,
+                                  plan_mode=plan_mode).run
     raise ValueError(f"unknown scheduler {name!r}; choose from {SCHEDULER_NAMES}")

@@ -21,7 +21,7 @@ import numpy as np
 from .buffers import Buffer, BufferView
 from .segments import Segment, SegmentSet
 
-__all__ = ["Task", "Operand", "operand_shape", "operand_dtype"]
+__all__ = ["Task", "Operand", "operand_shape", "operand_dtype", "operand_base"]
 
 Operand = Union[Buffer, BufferView]
 
@@ -39,6 +39,12 @@ def operand_shape(op: Operand) -> Tuple[int, ...]:
 def operand_dtype(op: Operand) -> np.dtype:
     buf = op.buffer if isinstance(op, BufferView) else op
     return np.dtype(buf.dtype)
+
+
+def operand_base(op: Operand) -> Buffer:
+    """The backing allocation: a view's parent buffer, or the buffer itself.
+    This is the unit the slab arena assigns rows to."""
+    return op.buffer if isinstance(op, BufferView) else op
 
 
 @dataclasses.dataclass

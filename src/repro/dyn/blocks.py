@@ -22,6 +22,7 @@ __all__ = [
     "conv", "dwconv", "pool_avg", "pool_max", "add2", "add3", "concat2",
     "dense", "gap", "mix_weights", "init_conv", "init_dense", "DynParams",
     "launch_conv", "launch_add", "conv_flops",
+    "DYN_KERNELS", "register_device_kernels",
 ]
 
 
@@ -108,6 +109,20 @@ dense = AcsKernel(name="dense", fn=_dense_fn,
 gap = AcsKernel(name="gap", fn=_gap_fn)
 mix_weights = AcsKernel(name="mix_weights", fn=_mix_weights_fn)
 upsample2 = AcsKernel(name="upsample2", fn=_upsample2_fn)
+
+#: Every kernel the dyn/static DNN builders can emit — the fixed opcode set
+#: the device-resident window (DESIGN §2 A3) needs registered ahead of time.
+DYN_KERNELS = (conv, dwconv, pool_avg, pool_max, add2, add3, concat2,
+               dense, gap, mix_weights, upsample2)
+
+
+def register_device_kernels(registry) -> Dict[str, int]:
+    """Register the CNN kernel set with a
+    :class:`~repro.core.DeviceOpRegistry` (fn-less — see
+    ``repro.sim.engine.register_device_kernels``). Returns name -> opcode;
+    the shape classes each opcode runs over (one per feature-map / weight
+    geometry) are recorded at lowering time in ``registry.classes_seen``."""
+    return {k.name: registry.register(k.name) for k in DYN_KERNELS}
 
 
 def launch_upsample2(stream: TaskStream, pool: BufferPool, x: Buffer) -> Buffer:

@@ -19,7 +19,8 @@ from .grouped_matmul import grouped_matmul as _gmm
 from .lru_scan import lru_scan as _lru
 from .wave_elementwise import apply_wave, wave_elementwise as _wave
 
-__all__ = ["attention", "grouped_matmul", "lru_scan", "wave_step"]
+__all__ = ["attention", "grouped_matmul", "lru_scan", "wave_step",
+           "register_device_ops"]
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
@@ -52,6 +53,18 @@ def lru_scan(a, b, h0, *, use_pallas: Optional[bool] = None, **block_kw):
     if use_pallas:
         return _lru(a, b, h0, **block_kw)
     return ref.lru_scan_ref(a, b, h0)
+
+
+def register_device_ops(registry) -> dict:
+    """Register the Pallas-backed kernel dispatchers as device opcodes so
+    streams built from :class:`~repro.core.AcsKernel`s named after them
+    lower through the slab arena (fn-less entries: the arena path runs the
+    wrapper-resolved callable, which already routes Pallas vs the jnp
+    oracle via ``use_pallas``). Returns name -> opcode."""
+    return {
+        name: registry.register(name)
+        for name in ("attention", "grouped_matmul", "lru_scan")
+    }
 
 
 def wave_step(slab, desc, *, branches, use_pallas: Optional[bool] = None):

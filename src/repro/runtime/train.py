@@ -125,8 +125,11 @@ class Trainer:
         for step in range(self.start_step, end):
             if self.fail_at_step is not None and step == self.fail_at_step:
                 raise RuntimeError(f"injected failure at step {step}")
-            inputs, labels = self.pipeline.next_batch()
+            # The watchdog times the WHOLE step, batch fetch included: an
+            # input-pipeline stall delays the step exactly like a slow
+            # device and must register as straggler signal.
             t0 = time.perf_counter()
+            inputs, labels = self.pipeline.next_batch()
             self.state, m = self._step(
                 self.state, jnp.asarray(inputs), jnp.asarray(labels),
                 jnp.asarray(self.schedule(step), jnp.float32),

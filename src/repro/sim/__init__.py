@@ -7,7 +7,8 @@ input-dependent — the set of active contacts changes with the simulation
 state every step, exactly the irregularity ACS targets.
 """
 
-from .engine import PhysicsEngine, SimKernelStats
+from .engine import PhysicsEngine, SimKernelStats, SIM_KERNELS, register_device_kernels
 from .envs import ENVIRONMENTS, EnvSpec, make_env
 
-__all__ = ["PhysicsEngine", "SimKernelStats", "ENVIRONMENTS", "EnvSpec", "make_env"]
+__all__ = ["PhysicsEngine", "SimKernelStats", "SIM_KERNELS",
+           "register_device_kernels", "ENVIRONMENTS", "EnvSpec", "make_env"]

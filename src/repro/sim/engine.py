@@ -29,7 +29,7 @@ from ..core.task import Task
 from ..core.wrapper import AcsKernel, TaskStream
 from .envs import EnvSpec, initial_state
 
-__all__ = ["PhysicsEngine", "SimKernelStats"]
+__all__ = ["PhysicsEngine", "SimKernelStats", "SIM_KERNELS", "register_device_kernels"]
 
 _DT = 0.01
 _GRAVITY = -9.81
@@ -119,6 +119,20 @@ _CONTACT = AcsKernel(name="contact_pair", fn=_contact_fn)
 _GROUND = AcsKernel(name="ground_contact", fn=_ground_fn)
 _INTEGRATE = AcsKernel(name="integrate", fn=_integrate_fn)
 _OBSERVE = AcsKernel(name="observe", fn=_observe_fn)
+
+#: Every kernel a PhysicsEngine stream can emit — the fixed opcode set the
+#: device-resident window (DESIGN §2 A3) needs registered ahead of time.
+SIM_KERNELS = (_JOINT, _CONTACT, _GROUND, _INTEGRATE, _OBSERVE)
+
+
+def register_device_kernels(registry) -> Dict[str, int]:
+    """Register the simulation kernel set with a
+    :class:`~repro.core.DeviceOpRegistry` (fn-less: the arena path executes
+    each task's wrapper-resolved callable, with static args baked; the
+    registry entry is the opcode-table slot that gates lowering). Returns
+    name -> opcode. Shape classes per opcode are recorded by the lowering
+    pass in ``registry.classes_seen``."""
+    return {k.name: registry.register(k.name) for k in SIM_KERNELS}
 
 
 class SimKernelStats:
@@ -289,6 +303,11 @@ class PhysicsEngine:
         for t in stream.tasks:
             elems = sum(int(np.prod(operand_shape(o))) for o in t.outputs)
             self.stats.elements.append(elems)
+
+    def buffers(self) -> Tuple[Buffer, ...]:
+        """All live allocations (states, force accumulators, controls) in
+        allocation order — what the device runner's slab arena packs."""
+        return self.pool.buffers()
 
     def state_snapshot(self) -> np.ndarray:
         return np.concatenate([np.asarray(g.state.value) for g in self.groups], axis=0)

@@ -1,0 +1,313 @@
+"""Shape-class slab arena + arena device path on the REAL workloads.
+
+The acceptance bar of DESIGN §2 A3's generalization: the device-resident
+window must run the same sim-engine and dynamic-DNN streams the host
+schedulers run — mixed shape classes, variable arity, row-view aliasing,
+multi-output tasks — bit-identically to the serial baseline, in ONE
+dispatch per stream.
+"""
+
+import numpy as np
+import pytest
+from _prophelper import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BufferPool,
+    DeviceOpRegistry,
+    DeviceWindowRunner,
+    SlabArena,
+    Task,
+    TaskStream,
+    make_scheduler,
+    pad_shape,
+    run_serial,
+)
+from repro.core.task import default_segments
+
+PLAN_MODES = ("wave", "frontier")
+
+# A few shape classes that exercise padding, collisions, and rank variety.
+SHAPES = [(5,), (7,), (8,), (3, 6), (3, 8), (2, 4, 6)]
+DTYPES = [np.float32, np.int32]
+
+
+# ---------------------------------------------------------------------------
+# Arena mechanics
+# ---------------------------------------------------------------------------
+
+class TestSlabArena:
+    def test_pad_shape(self):
+        assert pad_shape((5,), 8) == (8,)
+        assert pad_shape((3, 6), 8) == (3, 8)
+        assert pad_shape((8,), 8) == (8,)
+        assert pad_shape((3, 6), 1) == (3, 6)
+        assert pad_shape((), 8) == ()
+
+    def test_shape_collision_shares_class(self):
+        """(5,) and (7,) pad to (8,) -> same slab, distinct rows, and the
+        per-operand true shape survives the round trip."""
+        pool = BufferPool()
+        a = pool.alloc((5,), np.float32, value=jnp.arange(5, dtype=jnp.float32))
+        b = pool.alloc((7,), np.float32, value=jnp.arange(7, dtype=jnp.float32))
+        arena = SlabArena(pad_multiple=8)
+        ca, ra = arena.add(a)
+        cb, rb = arena.add(b)
+        assert ca == cb and ra != rb
+        assert arena.n_classes() == 1
+        slabs = arena.pack()
+        assert slabs[0].shape == (2, 8)  # one row per buffer, no scratch
+        arena.unpack(slabs)
+        np.testing.assert_array_equal(np.asarray(a.value), np.arange(5, dtype=np.float32))
+        np.testing.assert_array_equal(np.asarray(b.value), np.arange(7, dtype=np.float32))
+
+    def test_dtype_splits_class(self):
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8)
+        f = pool.alloc((8,), np.float32, value=jnp.zeros(8))
+        i = pool.alloc((8,), np.int32, value=jnp.zeros(8, jnp.int32))
+        assert arena.add(f)[0] != arena.add(i)[0]
+
+    def test_view_addressing_and_byte_view_rejection(self):
+        pool = BufferPool()
+        buf = pool.alloc((6, 4), np.float32, value=jnp.zeros((6, 4)))
+        arena = SlabArena(pad_multiple=8)
+        addr = arena.address(buf.row_view(2, 3))
+        assert addr.is_view and addr.row_start == 2 and addr.row_count == 3
+        assert addr.class_id == arena.add(buf)[0]
+        with pytest.raises(ValueError, match="row views"):
+            arena.address(buf.view(0, 16))  # raw byte view: no row semantics
+
+    def test_padding_waste_metric(self):
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8)
+        arena.add(pool.alloc((6,), np.float32, value=jnp.zeros(6)))
+        waste = arena.padding_waste()
+        (entry,) = waste.values()
+        assert entry["rows"] == 1
+        assert entry["padded_elems_per_row"] == 8
+        assert entry["used_elems"] == 6
+        assert entry["waste_frac"] == 0.25
+        assert arena.total_waste_frac() == pytest.approx(0.25)
+
+    @given(st.lists(st.tuples(st.integers(0, len(SHAPES) - 1),
+                              st.integers(0, len(DTYPES) - 1)),
+                    min_size=1, max_size=12),
+           st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_preserves_values_mixed_classes(self, picks, seed):
+        """Property: pack -> execute (copy tasks) -> unpack preserves every
+        buffer bit-exactly — untouched buffers through padding/slicing, and
+        written buffers bit-identical to the serial baseline."""
+        rng = np.random.RandomState(seed)
+
+        def build():
+            pool = BufferPool()
+            bufs = []
+            for si, di in picks:
+                shape, dtype = SHAPES[si], DTYPES[di]
+                val = (rng.randn(*shape) * 8).astype(dtype)
+                bufs.append(pool.from_array(jnp.asarray(val)))
+            # copy tasks within a shape/dtype class (same true shape)
+            tasks = []
+            by_key = {}
+            for b in bufs:
+                by_key.setdefault((tuple(b.shape), str(np.dtype(b.dtype))), []).append(b)
+            for group in by_key.values():
+                for src, dst in zip(group, group[1:]):
+                    r, w = default_segments((src,), (dst,))
+                    tasks.append(Task(opcode="copy", fn=lambda x: x + x.dtype.type(1),
+                                      inputs=(src,), outputs=(dst,),
+                                      read_segments=r, write_segments=w))
+            return bufs, tasks
+
+        state = rng.get_state()
+        ref_bufs, ref_tasks = build()
+        if ref_tasks:
+            run_serial(ref_tasks)
+        ref = [np.asarray(b.value) for b in ref_bufs]
+
+        rng.set_state(state)
+        dev_bufs, dev_tasks = build()
+        if dev_tasks:
+            DeviceWindowRunner(window_size=8).execute(dev_tasks, dev_bufs)
+        else:  # no tasks: pure pack/unpack round trip
+            arena = SlabArena()
+            for b in dev_bufs:
+                arena.add(b)
+            arena.unpack(arena.pack())
+        for b, r in zip(dev_bufs, ref):
+            np.testing.assert_array_equal(np.asarray(b.value), r)
+
+
+# ---------------------------------------------------------------------------
+# Real workload equivalence (the ISSUE acceptance bar)
+# ---------------------------------------------------------------------------
+
+def sim_setup(seed=0, n_envs=4, group_size=2, steps=2):
+    from repro.sim import ENVIRONMENTS, PhysicsEngine
+
+    eng = PhysicsEngine(ENVIRONMENTS["cheetah"], n_envs=n_envs,
+                        group_size=group_size, seed=seed)
+    stream = TaskStream()
+    eng.emit_batch(stream, steps)
+    return eng, stream.tasks
+
+
+def dyn_setup(seed=0):
+    from repro.dyn import WORKLOADS
+
+    init_fn, build_fn, _ = WORKLOADS["dynamic_routing"]
+    rng = np.random.RandomState(seed)
+    x = rng.randn(1, 3, 32, 32).astype(np.float32)
+    params = init_fn(0)
+    stream = TaskStream()
+    out = build_fn(params, stream, x)
+    return out, stream.tasks
+
+
+class TestDeviceRunsRealWorkloads:
+    @pytest.mark.parametrize("plan_mode", PLAN_MODES)
+    def test_sim_stream_matches_serial(self, plan_mode):
+        eng_ref, tasks_ref = sim_setup()
+        run_serial(tasks_ref)
+        ref = eng_ref.state_snapshot()
+
+        eng_dev, tasks_dev = sim_setup()
+        from repro.sim import register_device_kernels
+
+        registry = DeviceOpRegistry()
+        register_device_kernels(registry)  # strict: the fixed HW opcode set
+        runner = DeviceWindowRunner(registry, window_size=32, plan_mode=plan_mode)
+        report = runner.run(tasks_dev)
+
+        np.testing.assert_array_equal(eng_dev.state_snapshot(), ref)
+        assert report.exec_stats["dispatches"] == 1
+        assert report.exec_stats["tasks_run"] == len(tasks_dev)
+        assert report.arena_stats["n_classes"] >= 2
+        assert report.window_stats["inserted"] == len(tasks_dev)
+        # row-view aliasing classes recorded per opcode
+        assert "joint_solve" in registry.classes_seen
+
+    @pytest.mark.parametrize("plan_mode", PLAN_MODES)
+    def test_dyn_stream_matches_serial(self, plan_mode):
+        out_ref, tasks_ref = dyn_setup()
+        run_serial(tasks_ref)
+        ref = np.asarray(out_ref.value)
+
+        out_dev, tasks_dev = dyn_setup()
+        from repro.dyn.blocks import register_device_kernels
+
+        registry = DeviceOpRegistry()
+        register_device_kernels(registry)
+        report = DeviceWindowRunner(registry, window_size=32,
+                                    plan_mode=plan_mode).run(tasks_dev)
+
+        np.testing.assert_array_equal(np.asarray(out_dev.value), ref)
+        assert report.exec_stats["dispatches"] == 1
+        assert report.arena_stats["n_classes"] >= 2
+        assert 0.0 <= report.arena_stats["total_waste_frac"] < 1.0
+
+    def test_make_scheduler_device_contract(self):
+        """`make_scheduler("device")` returns a runner conforming to the
+        SchedulerReport contract the host schedulers satisfy."""
+        eng_ref, tasks_ref = sim_setup(steps=1)
+        run_serial(tasks_ref)
+        ref = eng_ref.state_snapshot()
+
+        eng_dev, tasks_dev = sim_setup(steps=1)
+        run = make_scheduler("device", window_size=32, plan_mode="frontier")
+        report = run(tasks_dev)
+
+        np.testing.assert_array_equal(eng_dev.state_snapshot(), ref)
+        assert report.exec_stats["dispatches"] == 1
+        assert report.window_stats["inserted"] == len(tasks_dev)
+        assert 0.0 < report.occupancy_proxy() <= 1.0
+        assert report.wall_seconds > 0
+        assert report.plan_mode == "frontier"
+
+    def test_make_scheduler_rejects_bad_plan_mode(self):
+        with pytest.raises(ValueError, match="plan_mode"):
+            make_scheduler("device", plan_mode="bogus")
+
+
+class TestMultiOutputAndArity:
+    def test_multi_output_task(self):
+        """The arena path scatters every output of a multi-output task."""
+        def split(x, y):
+            return x + y, x - y
+
+        def build():
+            pool = BufferPool()
+            a = pool.alloc((6,), np.float32, value=jnp.arange(6, dtype=jnp.float32))
+            b = pool.alloc((6,), np.float32, value=jnp.ones(6))
+            s = pool.alloc((6,), np.float32)
+            d = pool.alloc((6,), np.float32)
+            r, w = default_segments((a, b), (s, d))
+            t = Task(opcode="split", fn=split, inputs=(a, b), outputs=(s, d),
+                     read_segments=r, write_segments=w)
+            return (s, d), [t]
+
+        outs_ref, tasks_ref = build()
+        run_serial(tasks_ref)
+        outs_dev, tasks_dev = build()
+        report = DeviceWindowRunner().run(tasks_dev)
+        for dev, ref in zip(outs_dev, outs_ref):
+            np.testing.assert_array_equal(np.asarray(dev.value), np.asarray(ref.value))
+        assert report.exec_stats["dispatches"] == 1
+
+    def test_signature_equal_view_and_buffer_do_not_group(self):
+        """Regression: a full (2,4) buffer and a 2-row view of an (8,4)
+        buffer are Task.signature-equal (same value shape) but need
+        different gather code — lowering must split them into separate
+        steps, not take the first task's addressing for both."""
+        def bump(x):
+            return x + 1.0
+
+        def build():
+            pool = BufferPool()
+            small = pool.alloc((2, 4), np.float32,
+                               value=jnp.full((2, 4), 10.0))
+            big = pool.alloc((8, 4), np.float32,
+                             value=jnp.full((8, 4), 100.0))
+            outs = [pool.alloc((2, 4), np.float32) for _ in range(2)]
+            tasks = []
+            for src, dst in ((small, outs[0]), (big.row_view(2, 2), outs[1])):
+                r, w = default_segments((src,), (dst,))
+                tasks.append(Task(opcode="bump", fn=bump, inputs=(src,),
+                                  outputs=(dst,), read_segments=r,
+                                  write_segments=w))
+            return outs, tasks
+
+        outs_ref, tasks_ref = build()
+        run_serial(tasks_ref)
+        outs_dev, tasks_dev = build()
+        report = DeviceWindowRunner().run(tasks_dev)
+        assert report.exec_stats["dispatches"] == 1
+        for dev, ref in zip(outs_dev, outs_ref):
+            np.testing.assert_array_equal(np.asarray(dev.value),
+                                          np.asarray(ref.value))
+
+    def test_variable_arity_beyond_legacy_limit(self):
+        """Arity > MAX_ARITY lowers fine through the arena (the sim
+        integrate kernel relies on this)."""
+        def sum5(a, b, c, d, e):
+            return a + b + c + d + e
+
+        def build():
+            pool = BufferPool()
+            ins = tuple(pool.alloc((4,), np.float32,
+                                   value=jnp.full(4, float(i + 1)))
+                        for i in range(5))
+            out = pool.alloc((4,), np.float32)
+            r, w = default_segments(ins, (out,))
+            return out, [Task(opcode="sum5", fn=sum5, inputs=ins, outputs=(out,),
+                              read_segments=r, write_segments=w)]
+
+        out_ref, t_ref = build()
+        run_serial(t_ref)
+        out_dev, t_dev = build()
+        DeviceWindowRunner().run(t_dev)
+        np.testing.assert_array_equal(np.asarray(out_dev.value),
+                                      np.asarray(out_ref.value))
