@@ -1,0 +1,188 @@
+"""Open-loop serving latency: session-frontier vs per-step batch drains.
+
+The ACS runtime argument (paper §III-D, DESIGN.md §10) is that the window
+must be *continuously refilled while kernels execute*. This section
+measures what that buys a server: requests arrive open-loop (Poisson, the
+arrival process does not wait for the server), and we compare
+
+* ``SessionServer(scheduler="frontier")`` — admission emits prefills into
+  the live window at pump cadence, while the previous decode group is
+  still in flight;
+* ``ContinuousBatchingServer`` — the seed per-step design: each iteration
+  rebuilds a stream and drains it to empty, so a request arriving mid-step
+  waits out the whole running drain before its prefill is even admitted.
+
+Methodology (DESIGN.md §10): both servers are compile-warmed (every decode
+arity — a missed arity costs a ~1s jit burst mid-run), the offered load is
+calibrated to ~75% of the batch server's closed-loop capacity, and both
+servers then serve the *same* Poisson arrival waves (equal offered load).
+Latency runs from scheduled arrival to last-token retirement, so admission
+queueing is charged to the server. The comparison is **paired**: each wave
+runs on both servers back-to-back (order alternating per wave) and the
+headline is the median over waves of the per-wave p95 ratio — on a noisy
+shared host, absolute percentiles drift with whatever else the machine is
+doing, but a paired ratio mostly cancels it. Pooled percentiles are also
+emitted for context. The session server keeps ONE live session open across
+all waves (the point of the PR); the batch server drains per step.
+
+Headline: session beats batch on the median paired p95 ratio (plus
+p50/p95/p99, throughput, admission-wait, and window residency context).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import init_params
+
+from .common import emit, opt, smoke
+
+
+def _bench_cfg():
+    # big enough that one decode round costs ~10ms (structural latency
+    # differences must dominate host scheduling jitter), small enough
+    # that warmup compiles stay in seconds
+    return dataclasses.replace(
+        ARCHS["h2o-danube-3-4b"].reduced(),
+        n_layers=4, d_model=256, d_ff=768, vocab=512,
+        n_heads=4, n_kv_heads=2, head_dim=64,
+    )
+
+
+def _drive(server, is_session, prompts, arrivals, max_new):
+    """Open-loop event loop: inject each request at its scheduled arrival;
+    otherwise pump (session) / step (batch); idle-sleep only when the
+    server is empty and the next arrival is in the future."""
+    n = len(prompts)
+    t0 = time.perf_counter()
+    nxt = 0
+    done = []
+    while len(done) < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            req = server.submit(prompts[nxt], max_new=max_new)
+            req.t_arrival = t0 + arrivals[nxt]  # latency from scheduled arrival
+            nxt += 1
+        finished = server.pump() if is_session else server.step()
+        done.extend(finished)
+        if not finished:
+            if is_session and (server.active or server.queue):
+                server.session.drive()  # block for one retirement
+            elif not server.active and not server.queue and nxt < n:
+                time.sleep(min(max(arrivals[nxt] - (time.perf_counter() - t0), 0.0),
+                               0.001))
+    return done, time.perf_counter() - t0
+
+
+def main() -> None:
+    import jax
+
+    from repro.runtime import ContinuousBatchingServer, SessionServer
+
+    cfg = _bench_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp_size=1)
+    n_req = 12 if smoke() else 20      # per wave
+    n_waves = 4 if smoke() else 5
+    max_new = 4 if smoke() else 6
+    max_slots = 4
+    max_len = 16 + max_new + 4
+    window = opt("window", 16)
+
+    rng = np.random.RandomState(0)
+    # fixed prompt length => one prefill signature (compile cost amortizes
+    # identically for both servers)
+    prompts = [rng.randint(0, cfg.vocab, 16) for _ in range(n_req)]
+    warm_prompts = [rng.randint(0, cfg.vocab, 16) for _ in range(max_slots)]
+
+    def _warm(server):
+        """Closed-loop warmup: one drained round per concurrency level k
+        compiles EVERY decode arity 1..max_slots (a decode's jit signature
+        includes its slot arity; a missed arity costs a ~1s compile
+        mid-run): k requests admitted together decode as an arity-k group
+        for several rounds before any of them finishes."""
+        for k in range(1, max_slots + 1):
+            for p in warm_prompts[:k]:
+                server.submit(p, max_new=3)
+            server.run_until_drained()
+        server.report_log.clear()
+
+    batch_server = ContinuousBatchingServer(cfg, params, max_slots=max_slots,
+                                            max_len=max_len, window=window)
+    _warm(batch_server)
+    session_server = SessionServer(cfg, params, max_slots=max_slots,
+                                   max_len=max_len, window=window,
+                                   scheduler="frontier",
+                                   max_inflight=opt("inflight", 8))
+    _warm(session_server)
+
+    # Calibrate offered load on the warmed batch server: closed-loop
+    # makespan of one slot-set gives the mean service time; arrivals are
+    # then Poisson at ~75% of that capacity — loaded, not saturated.
+    t0 = time.perf_counter()
+    for p in prompts[:max_slots]:
+        batch_server.submit(p, max_new=max_new)
+    batch_server.run_until_drained()
+    batch_server.report_log.clear()
+    per_req = (time.perf_counter() - t0) / max_slots
+    rate = 0.75 / max(per_req, 1e-4)  # requests/second
+    waves = [np.cumsum(np.random.RandomState(1000 + w).exponential(1.0 / rate,
+                                                                   size=n_req))
+             for w in range(n_waves)]
+    emit("serving", "offered_rate_rps", round(rate, 2))
+    emit("serving", "n_requests", n_req * n_waves)
+
+    servers = {"batch": (batch_server, False),
+               "session_frontier": (session_server, True)}
+    lat = {k: [] for k in servers}
+    admit_wait = {k: [] for k in servers}
+    span = {k: 0.0 for k in servers}
+    ratios = []
+    for w, arrivals in enumerate(waves):
+        wave_p95 = {}
+        # paired + order-alternating: host drift hits both servers alike
+        order = ("batch", "session_frontier") if w % 2 == 0 else (
+            "session_frontier", "batch")
+        for name in order:
+            server, is_session = servers[name]
+            done, makespan = _drive(server, is_session, prompts, arrivals,
+                                    max_new)
+            assert len(done) == n_req, f"{name}: {len(done)}/{n_req} finished"
+            assert all(len(r.generated) == max_new for r in done)
+            wave_lat = [r.latency for r in done]
+            wave_p95[name] = float(np.percentile(wave_lat, 95))
+            lat[name].extend(wave_lat)
+            admit_wait[name].extend(r.t_admit - r.t_arrival for r in done)
+            span[name] += makespan
+        ratios.append(wave_p95["batch"] / max(wave_p95["session_frontier"], 1e-9))
+
+    for name, (server, is_session) in servers.items():
+        if is_session:
+            max_resident = server.session.window.stats.max_resident
+            emit("serving", "session_frontier_mean_resident",
+                 round(float(np.mean(server.occupancy_samples or [0])), 2))
+        else:
+            max_resident = max([e.get("window_max_resident", 0)
+                                for e in server.report_log] or [0])
+        for p in (50, 95, 99):
+            emit("serving", f"{name}_p{p}_ms",
+                 round(float(np.percentile(lat[name], p)) * 1e3, 1))
+        emit("serving", f"{name}_throughput_rps",
+             round(n_req * n_waves / span[name], 2))
+        emit("serving", f"{name}_admit_wait_p95_ms",
+             round(float(np.percentile(admit_wait[name], 95)) * 1e3, 1))
+        emit("serving", f"{name}_window_max_resident", int(max_resident))
+
+    session_server.close()
+    speedup = float(np.median(ratios))
+    emit("serving", "paired_wave_p95_ratios",
+         "|".join(f"{r:.2f}" for r in ratios))
+    emit("serving", "session_p95_speedup", round(speedup, 3))
+    emit("serving", "session_beats_batch_p95", int(speedup > 1.0))
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,13 @@ from repro.core.device_dispatch import plan_waves
 from repro.core.dag_baseline import DagRunner, build_full_dag
 
 
+# Every emit() row, kept for ``run.py --json=PATH`` (the machine-readable
+# BENCH_*.json perf trajectory; CI uploads it as an artifact).
+RESULTS: List[Dict[str, object]] = []
+
+
 def emit(name: str, metric: str, value) -> None:
+    RESULTS.append({"section": name, "metric": metric, "value": value})
     print(f"{name},{metric},{value}")
 
 

@@ -8,11 +8,15 @@ Flags (consumed by sections via benchmarks.common):
   --inflight=M     frontier scheduler's in-flight group cap
   --plan-mode=P    device runner plan lowering: wave | frontier
   --scheduler=S    restrict comparison sections to serial + S
+  --json=PATH      also write every emitted row (plus flags and per-section
+                   timings) as machine-readable JSON — the BENCH_*.json
+                   perf-trajectory format CI uploads as an artifact
   --smoke          CI-sized inputs; defaults to the plan-lowering sections
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -25,6 +29,7 @@ from . import (
     bench_moe_waves,
     bench_occupancy,
     bench_rl_e2e,
+    bench_serving,
     bench_sim_speedup,
     bench_static_dnn,
     bench_window_size,
@@ -43,19 +48,25 @@ SECTIONS = {
     "moe_waves": bench_moe_waves,        # beyond-paper (DESIGN §4)
     "frontier": bench_frontier,          # beyond-paper (DESIGN §9)
     "device": bench_device,              # ACS-HW analogue (DESIGN §2 A3)
+    "serving": bench_serving,            # live sessions (DESIGN §10)
 }
 
 # The sections --smoke runs when none are named: the ones exercising plan
-# lowering and the unified scheduler API (regressions there should fail in
-# CI, not at bench time).
-SMOKE_SECTIONS = ("device", "frontier")
+# lowering, the unified scheduler API, and the live-session serving path
+# (regressions there should fail in CI, not at bench time).
+SMOKE_SECTIONS = ("device", "frontier", "serving")
 
 
 def main() -> None:
     chosen = []
+    json_path = None
     for arg in sys.argv[1:]:
         if arg == "--smoke":
             common.OPTIONS["smoke"] = "1"
+        elif arg.startswith("--json="):
+            json_path = arg[len("--json="):]
+            if not json_path:
+                raise SystemExit("--json expects a path (--json=bench.json)")
         elif arg.startswith("--") and "=" in arg:
             key, _, value = arg[2:].partition("=")
             if key in common.FLAG_KEYS:
@@ -71,7 +82,8 @@ def main() -> None:
                 flags = [f"--{k}=N" for k in common.FLAG_KEYS]
                 flags += [f"--{k}={{{'|'.join(v)}}}" for k, v in common.CHOICE_FLAGS.items()]
                 raise SystemExit(
-                    f"unknown flag --{key}; choose from: " + ", ".join(flags + ["--smoke"])
+                    f"unknown flag --{key}; choose from: "
+                    + ", ".join(flags + ["--json=PATH", "--smoke"])
                 )
             common.OPTIONS[key] = value
         elif arg.startswith("--"):
@@ -89,11 +101,23 @@ def main() -> None:
     if not chosen:
         chosen = list(SMOKE_SECTIONS) if common.smoke() else list(SECTIONS)
     print("section,metric,value")
+    timings = {}
     for name in chosen:
         mod = SECTIONS[name]
         t0 = time.time()
         mod.main()
-        print(f"_timing,{name}_seconds,{time.time() - t0:.1f}")
+        timings[name] = round(time.time() - t0, 1)
+        print(f"_timing,{name}_seconds,{timings[name]}")
+    if json_path is not None:
+        payload = {
+            "flags": dict(common.OPTIONS),
+            "sections": chosen,
+            "timings_seconds": timings,
+            "results": common.RESULTS,
+        }
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"_json,path,{json_path}")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ from .device_dispatch import (
     plan_waves,
 )
 from .executors import FusedWaveExecutor, GroupExecutor, SerialExecutor
-from .frontier import AsyncFrontierScheduler, DispatchQueue
+from .frontier import AsyncFrontierScheduler, DispatchQueue, FrontierSession
 from .perfmodel import (
     DeviceModel,
     RTX3060_LIKE,
@@ -25,12 +25,15 @@ from .scheduler import (
     GroupTrace,
     PLAN_MODES,
     SCHEDULER_NAMES,
+    SESSION_NAMES,
     SchedulerReport,
     ThreadedStreamScheduler,
     WaveScheduler,
     make_scheduler,
+    make_session,
     run_serial,
 )
+from .session import SchedulerSession, TaskTicket, ThreadedSession, WaveSession
 from .segments import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
 from .task import Task, operand_base, operand_dtype, operand_shape
 from .window import SchedulingWindow, TaskState
@@ -58,6 +61,11 @@ __all__ = [
     "SerialExecutor",
     "AsyncFrontierScheduler",
     "DispatchQueue",
+    "FrontierSession",
+    "SchedulerSession",
+    "TaskTicket",
+    "ThreadedSession",
+    "WaveSession",
     "DeviceModel",
     "RTX3060_LIKE",
     "RTX3070_LIKE",
@@ -66,10 +74,12 @@ __all__ = [
     "GroupTrace",
     "PLAN_MODES",
     "SCHEDULER_NAMES",
+    "SESSION_NAMES",
     "SchedulerReport",
     "ThreadedStreamScheduler",
     "WaveScheduler",
     "make_scheduler",
+    "make_session",
     "run_serial",
     "Segment",
     "SegmentSet",

@@ -143,6 +143,18 @@ class BufferPool:
             self._buffers[name] = buf
             return buf
 
+    def free(self, name: str) -> None:
+        """Release a named buffer: the pool drops its reference (so the
+        host/device value can be collected) and the name becomes reusable.
+        Virtual addresses are NOT recycled — the bump pointer stays
+        monotone, so a freed buffer's range remains retired and past
+        segment checks stay exact. Long-running runtimes (the serving
+        driver's per-request prompt buffers) must free or they leak."""
+        with self._lock:
+            if name not in self._buffers:
+                raise KeyError(f"buffer {name!r} not allocated")
+            del self._buffers[name]
+
     def from_array(self, arr: Any, name: Optional[str] = None) -> Buffer:
         arr_np_dtype = np.dtype(str(arr.dtype)) if hasattr(arr, "dtype") else np.dtype(np.float32)
         return self.alloc(tuple(arr.shape), arr_np_dtype, name=name, value=arr)

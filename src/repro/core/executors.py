@@ -29,8 +29,9 @@ launch + synchronization overheads of §II-D.
 
 from __future__ import annotations
 
+import collections
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -222,11 +223,20 @@ class GroupExecutor:
     ``warm`` is the compile-ahead half: building a group's jitted callable
     while *other* groups execute hides compilation behind device time
     (DESIGN.md §9 double-buffering).
+
+    The executor owns the **in-flight ledger**: ``launch`` appends to
+    ``inflight`` (oldest first) and ``poll_landed``/``sync_oldest`` consume
+    it. Keeping the ledger here — not in a scheduler run loop — is what
+    lets groups stay in flight *across session submissions* (DESIGN.md
+    §10): a live session launches, returns to its producer, and retires
+    the group on a later ``poll`` with nothing lost in between. One live
+    session per executor.
     """
 
     def __init__(self) -> None:
         self.stats = ExecStats()
         self._fn_cache: Dict[Tuple, Callable] = {}
+        self.inflight: Deque[GroupHandle] = collections.deque()
 
     # -- compile-ahead -----------------------------------------------------
     @staticmethod
@@ -275,7 +285,7 @@ class GroupExecutor:
                 for i, t in enumerate(group):
                     vals = tuple(o[i] for o in outs)
                     t.write_outputs(vals)
-                    raw.extend(vals)
+                    raw.extend(jax.tree_util.tree_leaves(vals))
             else:
                 for i, t in enumerate(group):
                     t.write_outputs(outs[i])
@@ -283,20 +293,50 @@ class GroupExecutor:
         else:
             outs = fn(*group[0].input_values())
             group[0].write_outputs(outs)
-            raw = list(outs) if isinstance(outs, (tuple, list)) else [outs]
+            # leaves, not top-level elements: pytree-valued outputs (e.g.
+            # serving cache tuples) must expose their arrays to poll()
+            raw = jax.tree_util.tree_leaves(outs)
         self.stats.dispatches += 1
         self.stats.tasks_run += len(group)
         self.stats.wave_widths.append(len(group))
-        return GroupHandle(group, raw, time.perf_counter())
+        handle = GroupHandle(group, raw, time.perf_counter())
+        self.inflight.append(handle)
+        return handle
 
     def poll(self, handle: GroupHandle) -> bool:
         """True iff every result of the group has landed on device."""
         return all(_is_ready(a) for a in handle.raw_outputs)
 
+    def poll_landed(self) -> List[GroupHandle]:
+        """Remove and return every in-flight group whose results have
+        landed (non-blocking) — the session's rolling-retire probe."""
+        landed: List[GroupHandle] = []
+        still: Deque[GroupHandle] = collections.deque()
+        for handle in self.inflight:
+            if self.poll(handle):
+                landed.append(handle)
+            else:
+                still.append(handle)
+        self.inflight = still
+        return landed
+
     def sync(self, handle: GroupHandle) -> None:
         """Blocking fallback: wait for the group (the §II-D overhead)."""
         jax.block_until_ready(handle.raw_outputs)
         self.stats.blocking_syncs += 1
+        try:
+            self.inflight.remove(handle)
+        except ValueError:
+            pass  # already consumed via poll_landed/sync_oldest
+
+    def sync_oldest(self) -> Optional[GroupHandle]:
+        """Blocking-sync the oldest in-flight group (its downstreams have
+        waited longest); None when nothing is in flight."""
+        if not self.inflight:
+            return None
+        handle = self.inflight.popleft()
+        self.sync(handle)
+        return handle
 
     def finalize(self) -> None:
         jax.block_until_ready(jax.numpy.zeros(()))

@@ -31,6 +31,13 @@ kernel.
 A blocking sync happens only when the pipeline truly stalls (window full
 of in-flight work and nothing polls complete); ``ExecStats.blocking_syncs``
 counts these, and the benchmark acceptance bar is syncs << dispatches.
+
+The frontier is expressed as a live :class:`FrontierSession` (DESIGN.md
+§10): producers ``submit()`` while groups are in flight — the executor's
+in-flight ledger survives across submissions, so a task submitted now can
+coalesce with, launch behind, or retire ahead of work dispatched before it
+existed. :class:`AsyncFrontierScheduler.run` is the closed-batch wrapper
+(open, submit everything, close) that all batch callers keep using.
 """
 
 from __future__ import annotations
@@ -41,10 +48,10 @@ from typing import Deque, Iterable, List, Optional, Sequence, Set
 
 from .executors import GroupExecutor, GroupHandle
 from .scheduler import GroupTrace, SchedulerReport
+from .session import SchedulerSession
 from .task import Task
-from .window import SchedulingWindow
 
-__all__ = ["AsyncFrontierScheduler", "DispatchQueue"]
+__all__ = ["AsyncFrontierScheduler", "DispatchQueue", "FrontierSession"]
 
 
 class DispatchQueue:
@@ -117,6 +124,126 @@ class DispatchQueue:
         return not self._staged and not self._launchable
 
 
+class FrontierSession(SchedulerSession):
+    """Live-fed rolling frontier: the session form of the async frontier.
+
+    Every ``poll`` runs one scheduling step — retire groups whose results
+    landed (waking only true downstreams), launch staged groups up to the
+    in-flight cap, stage the fresh READY set, flip the double buffer.
+    In-flight groups live on the *executor's* ledger, so they survive
+    across ``submit`` calls: the producer can keep feeding the FIFO while
+    earlier groups execute, which is the paper's §III-D picture. ``drive``
+    adds the blocking fallback (sync the oldest in-flight group) used when
+    the pipeline genuinely stalls.
+    """
+
+    def __init__(
+        self,
+        window_size: int = 32,
+        executor: Optional[GroupExecutor] = None,
+        max_inflight: int = 8,
+        max_group: Optional[int] = None,
+    ):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        super().__init__(window_size)
+        ex = executor if executor is not None else GroupExecutor()
+        if ex.inflight:
+            # One live session per executor: poll_landed would hand this
+            # session groups whose tasks live in ANOTHER session's window
+            # (retire-not-resident corruption). Fail loudly at open instead.
+            raise RuntimeError(
+                f"executor has {len(ex.inflight)} in-flight group(s) from "
+                "another session; close it before opening a new one"
+            )
+        self.executor = ex
+        self.queue = DispatchQueue(max_group)
+        self.max_inflight = max_inflight
+
+    def _retire_group(self, handle: GroupHandle, blocking: bool) -> None:
+        self.window.retire_many(handle.tasks)
+        self.groups.append(
+            GroupTrace(
+                [t.tid for t in handle.tasks],
+                handle.t_launch - self._t0,
+                time.perf_counter() - self._t0,
+                blocking=blocking,
+            )
+        )
+        for t in handle.tasks:
+            self._note_retired(t)
+
+    def _pump(self) -> bool:
+        ex = self.executor
+        progressed = False
+
+        # 1. Retire every group whose results have landed (non-blocking).
+        for handle in ex.poll_landed():
+            self._retire_group(handle, blocking=False)
+            progressed = True
+
+        # 2. Launch previously staged groups up to the in-flight cap.
+        while len(ex.inflight) < self.max_inflight and self.queue.has_launchable:
+            group = self.queue.pop()
+            assert group is not None
+            for t in group:
+                self.window.mark_executing(t)
+            ex.launch(group)
+            self.waves.append([t.tid for t in group])
+            progressed = True
+
+        # 3. Stage the next groups from the current READY set (coalescing
+        #    batchable siblings), 4. flip the double buffer when drained.
+        self.queue.stage(self.window.ready_tasks())
+        if self.queue.flip(ex):
+            progressed = True
+        return progressed
+
+    def poll(self) -> List[Task]:
+        # Pump to quiescence, not one step: a retire that wakes a staged
+        # downstream should launch it within the same poll — otherwise
+        # every dependency edge costs an extra host round-trip.
+        with self._lock:
+            while self._pump():
+                pass
+        return self._drain_fresh()
+
+    def drive(self) -> List[Task]:
+        with self._lock:
+            progressed = False
+            while self._pump():
+                progressed = True
+            if not progressed:
+                self._sync_one()
+        return self._drain_fresh()
+
+    def _on_stall(self) -> None:
+        with self._lock:
+            self._sync_one()
+
+    def _sync_one(self) -> None:
+        """Blocking fallback (lock held): sync the oldest in-flight group —
+        the one whose downstreams have waited longest."""
+        handle = self.executor.sync_oldest()
+        if handle is not None:
+            self._retire_group(handle, blocking=True)
+        elif not self.window.idle():
+            # No in-flight work, no READY kernels, window non-empty:
+            # impossible by the window's no-deadlock invariant.
+            raise RuntimeError("frontier stall: no READY kernels but window non-empty")
+
+    def _finalize(self) -> SchedulerReport:
+        ex = self.executor
+        ex.finalize()
+        wall = time.perf_counter() - self._t0
+        # Accumulate like every other executor: the executor (and its
+        # ExecStats) persists across sessions, so overwriting would pair
+        # last-run seconds with all-runs dispatch counters in deltas.
+        ex.stats.exec_seconds += wall
+        return SchedulerReport(self.window, ex.stats, wall, self.waves,
+                               groups=self.groups)
+
+
 class AsyncFrontierScheduler:
     """Windowed out-of-order scheduler with rolling, barrier-free retire.
 
@@ -147,86 +274,18 @@ class AsyncFrontierScheduler:
         self.max_inflight = max_inflight
         self.max_group = max_group
 
+    def session(self) -> FrontierSession:
+        """Open a live session sharing this scheduler's executor (compile
+        caches and stats persist, as a long-running runtime's would)."""
+        return FrontierSession(
+            window_size=self.window_size,
+            executor=self.executor,
+            max_inflight=self.max_inflight,
+            max_group=self.max_group,
+        )
+
     def run(self, stream: Iterable[Task]) -> SchedulerReport:
-        window = SchedulingWindow(self.window_size)
-        window.submit_all(list(stream))
-        ex = self.executor
-        queue = DispatchQueue(self.max_group)
-        inflight: Deque[GroupHandle] = collections.deque()
-        traces: List[GroupTrace] = []
-        waves: List[List[int]] = []  # launch-order trace (one entry/group)
-
-        t0 = time.perf_counter()
-
-        def retire(handle: GroupHandle, blocking: bool) -> None:
-            window.retire_many(handle.tasks)
-            traces.append(
-                GroupTrace(
-                    [t.tid for t in handle.tasks],
-                    handle.t_launch - t0,
-                    time.perf_counter() - t0,
-                    blocking=blocking,
-                )
-            )
-
-        while not (window.drained() and not inflight and queue.empty()):
-            progressed = False
-
-            # 1. Retire every group whose results have landed (non-blocking
-            #    poll). Retiring wakes only true downstreams and refills the
-            #    window from the FIFO — the rolling frontier.
-            still: Deque[GroupHandle] = collections.deque()
-            for handle in inflight:
-                if ex.poll(handle):
-                    retire(handle, blocking=False)
-                    progressed = True
-                else:
-                    still.append(handle)
-            inflight = still
-
-            # 2. Launch previously staged groups (front buffer) up to the
-            #    in-flight cap.
-            while len(inflight) < self.max_inflight and queue.has_launchable:
-                group = queue.pop()
-                assert group is not None
-                for t in group:
-                    window.mark_executing(t)
-                inflight.append(ex.launch(group))
-                waves.append([t.tid for t in group])
-                progressed = True
-
-            # 3. Stage the *next* groups from the current READY set into the
-            #    back buffer, coalescing batchable siblings: dependency
-            #    state is maintained incrementally by the window.
-            queue.stage(window.ready_tasks())
-
-            # 4. Flip the double buffer when the front has drained (warms
-            #    compiles one iteration ahead of launch, overlapped with
-            #    the in-flight device work launched in step 2).
-            if queue.flip(ex):
-                progressed = True
-
-            if progressed:
-                continue
-
-            # 5. Pipeline stall: nothing landed, nothing launchable, nothing
-            #    newly ready. Block on the oldest in-flight group — the one
-            #    whose downstreams have waited longest.
-            if inflight:
-                handle = inflight.popleft()
-                ex.sync(handle)
-                retire(handle, blocking=True)
-            elif not window.drained():
-                # No in-flight work, no READY kernels, window non-empty:
-                # impossible by the window's no-deadlock invariant.
-                raise RuntimeError(
-                    "frontier stall: no READY kernels but window non-empty"
-                )
-
-        ex.finalize()
-        wall = time.perf_counter() - t0
-        # Accumulate like every other executor: the scheduler instance (and
-        # its ExecStats) persists across streams, so overwriting would pair
-        # last-run seconds with all-runs dispatch counters in deltas.
-        ex.stats.exec_seconds += wall
-        return SchedulerReport(window, ex.stats, wall, waves, groups=traces)
+        """Closed-batch wrapper: open a session, submit everything, close."""
+        session = self.session()
+        session.submit(list(stream))
+        return session.close()

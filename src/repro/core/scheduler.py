@@ -6,28 +6,27 @@ deterministic, which the equivalence tests rely on.
 
 :class:`ThreadedStreamScheduler` is the *mechanically faithful* ACS-SW of
 paper §IV-B: a window module plus K scheduler threads, each emulating one
-CUDA stream — poll window for a READY kernel under a lock, launch, block
-until complete (the ``StreamSync`` of Algorithm 2), retire, repeat. It
-exists to reproduce the paper's software architecture and its overhead
-profile (per-kernel dispatch + sync from host threads); the wave scheduler
-is the performance path on TPU.
+CUDA stream (Algorithm 2's poll/launch/StreamSync/retire loop). It exists
+to reproduce the paper's software architecture and its overhead profile
+(per-kernel dispatch + sync from host threads); the wave scheduler is the
+performance path on TPU.
 
-Both produce identical final buffer contents as the serial baseline
-(property-tested): ACS only reorders provably independent kernels.
+Every scheduler here is a thin closed-batch facade over a live
+:class:`~.session.SchedulerSession` (DESIGN.md §10): ``run(tasks)`` opens a
+session, submits the whole list, and closes — while ``session()`` (or
+:func:`make_session`) hands out the open-loop form that producers feed
+continuously, the paper's §III-D input FIFO. Both produce identical final
+buffer contents as the serial baseline (property-tested): ACS only
+reorders provably independent kernels.
 """
 
 from __future__ import annotations
 
-import threading
-import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence
-
-import jax
 
 from .executors import ExecStats, FusedWaveExecutor, SerialExecutor
 from .task import Task
 from .window import SchedulingWindow
-from .wrapper import TaskStream
 
 __all__ = [
     "GroupTrace",
@@ -36,8 +35,10 @@ __all__ = [
     "ThreadedStreamScheduler",
     "run_serial",
     "SCHEDULER_NAMES",
+    "SESSION_NAMES",
     "PLAN_MODES",
     "make_scheduler",
+    "make_session",
 ]
 
 
@@ -131,27 +132,19 @@ class WaveScheduler:
         self.executor = executor if executor is not None else FusedWaveExecutor()
         self.max_wave = max_wave  # cap = number of "streams"; None = unbounded
 
+    def session(self):
+        """Open a live :class:`~.session.WaveSession` sharing this
+        scheduler's executor (compile caches persist across sessions)."""
+        from .session import WaveSession
+
+        return WaveSession(window_size=self.window_size, executor=self.executor,
+                           max_wave=self.max_wave)
+
     def run(self, stream: Iterable[Task]) -> SchedulerReport:
-        window = SchedulingWindow(self.window_size)
-        tasks = list(stream)
-        window.submit_all(tasks)
-        waves: List[List[int]] = []
-        t0 = time.perf_counter()
-        while not window.drained():
-            ready = window.ready_tasks()
-            if not ready:
-                raise RuntimeError("scheduler stall: no READY kernels but window non-empty")
-            if self.max_wave is not None:
-                ready = ready[: self.max_wave]
-            for t in ready:
-                window.mark_executing(t)
-            self.executor.execute_wave(ready)
-            for t in ready:
-                window.retire(t)
-            waves.append([t.tid for t in ready])
-        self.executor.finalize()
-        wall = time.perf_counter() - t0
-        return SchedulerReport(window, self.executor.stats, wall, waves)
+        """Closed-batch wrapper: open a session, submit everything, close."""
+        session = self.session()
+        session.submit(list(stream))
+        return session.close()
 
 
 class ThreadedStreamScheduler:
@@ -165,57 +158,20 @@ class ThreadedStreamScheduler:
         # new kernel shape, not per stream.
         self._jit_cache: Dict = {}
 
+    def session(self):
+        """Open a live :class:`~.session.ThreadedSession`: K worker threads
+        park on a condition variable until the FIFO feeds them."""
+        from .session import ThreadedSession
+
+        return ThreadedSession(window_size=self.window_size,
+                               num_streams=self.num_streams,
+                               jit_cache=self._jit_cache)
+
     def run(self, stream: Iterable[Task]) -> SchedulerReport:
-        window = SchedulingWindow(self.window_size)
-        tasks = list(stream)
-        window.submit_all(tasks)
-        lock = threading.Lock()
-        stats = ExecStats()
-        jit_cache = self._jit_cache
-        waves: List[List[int]] = []  # per-stream launch trace (width 1 each)
-
-        def stream_worker() -> None:
-            # Algorithm 2: poll for READY kernels until the stop condition.
-            while True:
-                with lock:
-                    if window.drained():
-                        return
-                    ready = window.ready_tasks()
-                    if not ready:
-                        task = None
-                    else:
-                        task = ready[0]
-                        window.mark_executing(task)
-                        fn = jit_cache.get(task.signature)
-                        if fn is None:
-                            fn = jax.jit(task.fn)
-                            jit_cache[task.signature] = fn
-                            stats.compiles += 1
-                        vals = task.input_values()
-                if task is None:
-                    time.sleep(0)  # yield; window not drained but nothing ready
-                    continue
-                out = fn(*vals)
-                jax.block_until_ready(out)  # StreamSync
-                with lock:
-                    task.write_outputs(out)
-                    window.retire(task)
-                    stats.dispatches += 1
-                    stats.tasks_run += 1
-                    stats.wave_widths.append(1)
-                    waves.append([task.tid])
-
-        t0 = time.perf_counter()
-        threads = [threading.Thread(target=stream_worker) for _ in range(self.num_streams)]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        wall = time.perf_counter() - t0
-        stats.exec_seconds = wall
-        if not window.drained():
-            raise RuntimeError("threaded scheduler exited before draining the window")
-        return SchedulerReport(window, stats, wall, waves)
+        """Closed-batch wrapper: open a session, submit everything, close."""
+        session = self.session()
+        session.submit(list(stream))
+        return session.close()
 
 
 def run_serial(stream: Iterable[Task]) -> SchedulerReport:
@@ -225,6 +181,10 @@ def run_serial(stream: Iterable[Task]) -> SchedulerReport:
 
 
 SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier", "device")
+# Policies that can run as live-fed sessions ("device" compiles closed
+# batches — plan lowering needs the whole window's future, so it has no
+# open-loop form).
+SESSION_NAMES = ("serial", "wave", "threaded", "frontier")
 PLAN_MODES = ("wave", "frontier")
 
 
@@ -260,3 +220,35 @@ def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
         return DeviceWindowRunner(window_size=window_size,
                                   plan_mode=plan_mode).run
     raise ValueError(f"unknown scheduler {name!r}; choose from {SCHEDULER_NAMES}")
+
+
+def make_session(name: str, window_size: int = 32, num_streams: int = 4,
+                 max_inflight: int = 8, max_group: Optional[int] = None):
+    """Factory over the live scheduler sessions (DESIGN.md §10): returns an
+    open :class:`~.session.SchedulerSession` that producers feed with
+    ``submit()`` while it dependency-checks, launches, and retires
+    concurrently in flight; ``close()`` returns the usual report.
+
+    ``"serial"`` is a window-1 session (program order, one dispatch per
+    kernel) — useful as the live-fed equivalence baseline. ``"device"`` has
+    no session form: the device runner compiles closed window batches.
+    """
+    from .session import ThreadedSession, WaveSession
+
+    if name == "serial":
+        return WaveSession(window_size=1, executor=SerialExecutor())
+    if name == "wave":
+        return WaveSession(window_size=window_size)
+    if name == "threaded":
+        return ThreadedSession(window_size=window_size, num_streams=num_streams)
+    if name == "frontier":
+        from .frontier import FrontierSession
+
+        return FrontierSession(window_size=window_size,
+                               max_inflight=max_inflight, max_group=max_group)
+    if name == "device":
+        raise ValueError(
+            "the device runner lowers closed window batches (plan_mode) and "
+            f"has no live session; choose from {SESSION_NAMES}"
+        )
+    raise ValueError(f"unknown session {name!r}; choose from {SESSION_NAMES}")

@@ -1,0 +1,377 @@
+"""Persistent scheduler sessions — the live-fed ACS window (DESIGN.md §10).
+
+The paper's runtime is *open-loop*: applications launch kernels into the
+input FIFO **while** the window dependency-checks, dispatches, and retires
+concurrently in flight (§III-C/D, Fig 14/15 — the FIFO refills the window
+as vacancies appear, it is never a closed batch). The seed schedulers only
+exposed ``run(tasks)``, which drains a closed list to empty; a serving
+runtime built on that must rebuild its stream and block the host every
+iteration, so decode *i* can never overlap prefill *i+1*.
+
+:class:`SchedulerSession` is the open-loop runtime. Lifecycle:
+
+* ``submit(tasks)`` — producers push tasks (or whole ``TaskStream``s) at
+  any time; returns the current backlog depth (FIFO + resident), the
+  backpressure signal. A ``TaskStream`` constructed with ``sink=session``
+  feeds every ``AcsKernel.launch`` straight into the window.
+* ``poll()`` — non-blocking progress: dispatch what is READY, retire what
+  has landed; returns tasks retired since the last drain.
+* ``drive()`` — like ``poll`` but may block for one retirement when the
+  pipeline is otherwise stalled (the frontier's oldest-group sync).
+* ``flush()`` — block until everything submitted so far has retired.
+* ``close()`` — end the input stream (``window.close_input()``), flush,
+  finalize, and return the familiar :class:`~.scheduler.SchedulerReport`.
+
+Callers observe retirement without draining the world: per-task completion
+callbacks (``submit(..., on_retire=...)`` / ``on_task_retired``) fire as
+each task retires, and ``ticket()`` hands out a future-like
+:class:`TaskTicket`. The closed-batch ``run(tasks)`` entry points on every
+scheduler are now thin open-submit-close wrappers over these sessions, so
+all batch callers and the serial-equivalence property are unchanged.
+
+Thread-safety: all bookkeeping runs under one re-entrant lock, so
+retirement callbacks may submit follow-on work into the same session (the
+serving runtime's decode chain does exactly this). ``ThreadedSession``
+executes on worker threads and fires callbacks from them; the
+single-threaded sessions make progress only inside ``poll``/``drive``/
+``flush`` calls.
+
+Bookkeeping that feeds the final report (the wave/group schedule traces,
+the retired-tid set backing ``on_task_retired``'s fire-immediately
+semantics) is session-lifetime state: a server fed unbounded streams
+should recycle its session periodically — close, report, reopen — the
+way it rotates a log.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Union
+
+import jax
+
+from .executors import ExecStats, FusedWaveExecutor
+from .scheduler import SchedulerReport
+from .task import Task
+from .window import SchedulingWindow
+
+__all__ = ["SchedulerSession", "TaskTicket", "WaveSession", "ThreadedSession"]
+
+RetireCallback = Callable[[Task], None]
+
+
+class TaskTicket:
+    """Future-like handle to one task's retirement (thread-safe)."""
+
+    __slots__ = ("task", "_event")
+
+    def __init__(self, task: Task):
+        self.task = task
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until retirement. Only meaningful while something else
+        drives the session (a worker thread, or another caller polling)."""
+        return self._event.wait(timeout)
+
+
+class SchedulerSession:
+    """Base class: open window + retirement bookkeeping. Subclasses supply
+    the dispatch policy via ``_pump`` (one non-blocking scheduling step)
+    and may override ``drive``/``flush``."""
+
+    def __init__(self, window_size: int = 32):
+        self.window = SchedulingWindow(window_size)
+        self.window.open_input()
+        self._lock = threading.RLock()
+        self._t0 = time.perf_counter()
+        self.waves: List[List[int]] = []
+        self.groups: List[Any] = []  # GroupTrace entries (frontier)
+        self._submitted = 0
+        self._retired = 0
+        self._retired_tids: Set[int] = set()
+        self._fresh: List[Task] = []  # retired since last drain
+        self._watchers: Dict[int, List[RetireCallback]] = {}
+        self._tickets: Dict[int, TaskTicket] = {}
+        self._listeners: List[RetireCallback] = []
+        self.retired_by_tag: Dict[str, int] = {}
+        self._closed = False
+
+    # -- producer side -----------------------------------------------------
+    def submit(
+        self,
+        tasks: Union[Task, Iterable[Task]],
+        on_retire: Optional[RetireCallback] = None,
+    ) -> int:
+        """Enqueue task(s) into the live window; callable at any time while
+        the session is open, including from retirement callbacks. Returns
+        the post-submit backlog depth (input FIFO + window residents) —
+        the producer's backpressure signal."""
+        batch = [tasks] if isinstance(tasks, Task) else list(tasks)
+        with self._lock:
+            if self._closed or not self.window.input_open:
+                raise RuntimeError("cannot submit to a closed session")
+            for t in batch:
+                if on_retire is not None:
+                    self._watchers.setdefault(t.tid, []).append(on_retire)
+                self._submitted += 1
+                self.window.submit(t)
+            depth = self.window.fifo_depth() + self.window.resident()
+            self._wake()
+        return depth
+
+    def backlog(self) -> int:
+        """Tasks submitted but not yet retired (FIFO + resident)."""
+        with self._lock:
+            return self.window.fifo_depth() + self.window.resident()
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    @property
+    def outstanding(self) -> int:
+        with self._lock:
+            return self._submitted - self._retired
+
+    # -- retirement observation --------------------------------------------
+    def add_retire_listener(self, cb: RetireCallback) -> None:
+        """Session-wide retirement subscriber (fires for every task)."""
+        with self._lock:
+            self._listeners.append(cb)
+
+    def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
+        """Per-task completion callback; fires immediately if the task has
+        already retired."""
+        with self._lock:
+            if task.tid in self._retired_tids:
+                fire_now = True
+            else:
+                self._watchers.setdefault(task.tid, []).append(cb)
+                fire_now = False
+        if fire_now:
+            cb(task)
+
+    def ticket(self, task: Task) -> TaskTicket:
+        """Future-like handle for one task's retirement."""
+        with self._lock:
+            tk = self._tickets.get(task.tid)
+            if tk is None:
+                tk = TaskTicket(task)
+                if task.tid in self._retired_tids:
+                    tk._event.set()
+                else:
+                    self._tickets[task.tid] = tk
+            return tk
+
+    # -- scheduler side ----------------------------------------------------
+    def poll(self) -> List[Task]:
+        """Non-blocking progress; returns tasks retired since last drain."""
+        with self._lock:
+            self._pump()
+        return self._drain_fresh()
+
+    def drive(self) -> List[Task]:
+        """Progress, blocking for at most one retirement if stalled."""
+        return self.poll()
+
+    def flush(self) -> None:
+        """Block until every task submitted so far has retired."""
+        while True:
+            with self._lock:
+                if self._retired >= self._submitted:
+                    return
+                progressed = self._pump()
+            if not progressed:
+                self._on_stall()
+
+    def close(self) -> SchedulerReport:
+        """End the input stream, drain everything in flight, and report."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("session already closed")
+            self.window.close_input()
+        self.flush()
+        report = self._finalize()
+        self._closed = True
+        return report
+
+    # -- internals ---------------------------------------------------------
+    def _pump(self) -> bool:
+        """One non-blocking scheduling step; True if progress was made.
+        Called with the lock held."""
+        raise NotImplementedError
+
+    def _on_stall(self) -> None:
+        """Nothing progressed during flush but work remains outstanding."""
+        raise RuntimeError("scheduler stall: no READY kernels but window non-empty")
+
+    def _finalize(self) -> SchedulerReport:
+        raise NotImplementedError
+
+    def _wake(self) -> None:
+        """Submission hook (threaded sessions notify their workers)."""
+
+    def _drain_fresh(self) -> List[Task]:
+        with self._lock:
+            out, self._fresh = self._fresh, []
+        return out
+
+    def _note_retired(self, task: Task) -> None:
+        """Central retirement bookkeeping (lock held): counters, per-tag
+        accounting, tickets, then callbacks. Callbacks run under the
+        re-entrant lock so they may submit into this session."""
+        self._retired += 1
+        self._retired_tids.add(task.tid)
+        self._fresh.append(task)
+        tag = task.stream_tag
+        if tag is not None:
+            self.retired_by_tag[tag] = self.retired_by_tag.get(tag, 0) + 1
+        ticket = self._tickets.pop(task.tid, None)
+        if ticket is not None:
+            ticket._event.set()
+        for cb in self._watchers.pop(task.tid, ()):  # noqa: B020
+            cb(task)
+        for cb in self._listeners:
+            cb(task)
+
+
+class WaveSession(SchedulerSession):
+    """Wave-synchronous session: each ``poll`` launches the current READY
+    set as one fused wave and retires it. With ``window_size=1`` this
+    degenerates to the serial baseline even under live feeding (tested
+    property); ``WaveScheduler.run`` is the closed-batch wrapper."""
+
+    def __init__(self, window_size: int = 32, executor: Optional[Any] = None,
+                 max_wave: Optional[int] = None):
+        super().__init__(window_size)
+        self.executor = executor if executor is not None else FusedWaveExecutor()
+        self.max_wave = max_wave
+
+    def _pump(self) -> bool:
+        ready = self.window.ready_tasks()
+        if not ready:
+            return False
+        if self.max_wave is not None:
+            ready = ready[: self.max_wave]
+        for t in ready:
+            self.window.mark_executing(t)
+        self.executor.execute_wave(ready)
+        self.waves.append([t.tid for t in ready])
+        for t in ready:
+            self.window.retire(t)
+            self._note_retired(t)
+        return True
+
+    def _finalize(self) -> SchedulerReport:
+        self.executor.finalize()
+        wall = time.perf_counter() - self._t0
+        return SchedulerReport(self.window, self.executor.stats, wall, self.waves)
+
+
+class ThreadedSession(SchedulerSession):
+    """Paper-faithful ACS-SW as a live session: K worker threads == K CUDA
+    streams, executing concurrently with producer submissions.
+
+    Idle workers park on a :class:`threading.Condition` and are signalled
+    on submit, retire, and close — the session wake-up primitive that
+    replaced the seed's ``time.sleep(0)`` spin-poll, so an idle stream
+    burns no CPU while it waits for the FIFO to refill."""
+
+    def __init__(self, window_size: int = 32, num_streams: int = 4,
+                 jit_cache: Optional[Dict] = None):
+        super().__init__(window_size)
+        self.num_streams = num_streams
+        self.stats = ExecStats()
+        self._jit_cache = jit_cache if jit_cache is not None else {}
+        self._cv = threading.Condition(self._lock)
+        self._worker_error: Optional[BaseException] = None
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"acs-stream-{i}")
+            for i in range(num_streams)
+        ]
+        for th in self._threads:
+            th.start()
+
+    def _wake(self) -> None:
+        self._cv.notify_all()
+
+    def _worker(self) -> None:
+        # Algorithm 2, session form: wait (not spin) for a READY kernel,
+        # launch, StreamSync, retire, signal.
+        try:
+            while True:
+                with self._cv:
+                    task = None
+                    while task is None:
+                        if self.window.drained():
+                            return  # input closed AND complete
+                        ready = self.window.ready_tasks()
+                        if ready:
+                            task = ready[0]
+                            self.window.mark_executing(task)
+                            fn = self._jit_cache.get(task.signature)
+                            if fn is None:
+                                fn = jax.jit(task.fn)
+                                self._jit_cache[task.signature] = fn
+                                self.stats.compiles += 1
+                            vals = task.input_values()
+                        else:
+                            self._cv.wait()  # woken on submit/retire/close
+                out = fn(*vals)
+                jax.block_until_ready(out)  # StreamSync
+                with self._cv:
+                    task.write_outputs(out)
+                    self.window.retire(task)
+                    self.stats.dispatches += 1
+                    self.stats.tasks_run += 1
+                    self.stats.wave_widths.append(1)
+                    self.waves.append([task.tid])
+                    self._note_retired(task)
+                    self._cv.notify_all()
+        except BaseException as exc:  # surface worker crashes to flush/close
+            with self._cv:
+                self._worker_error = exc
+                self._cv.notify_all()
+
+    def _check_error(self) -> None:
+        if self._worker_error is not None:
+            raise RuntimeError("threaded session worker failed") from self._worker_error
+
+    def poll(self) -> List[Task]:
+        with self._cv:
+            self._check_error()
+        return self._drain_fresh()
+
+    def drive(self) -> List[Task]:
+        with self._cv:
+            self._check_error()
+            if self._retired < self._submitted:
+                self._cv.wait(timeout=0.1)
+                self._check_error()
+        return self._drain_fresh()
+
+    def flush(self) -> None:
+        with self._cv:
+            while self._retired < self._submitted:
+                self._check_error()
+                self._cv.wait(timeout=0.1)
+            self._check_error()
+
+    def _finalize(self) -> SchedulerReport:
+        with self._cv:
+            self._cv.notify_all()  # input is closed: let idle workers exit
+        for th in self._threads:
+            th.join()
+        self._check_error()
+        if not self.window.drained():
+            raise RuntimeError("threaded scheduler exited before draining the window")
+        wall = time.perf_counter() - self._t0
+        self.stats.exec_seconds = wall
+        return SchedulerReport(self.window, self.stats, wall, self.waves)

@@ -66,6 +66,9 @@ class Task:
     # Unique id of the defining AcsKernel — disambiguates distinct kernels
     # that share a display name (e.g. two lambdas): signature safety.
     kernel_uid: int = -1
+    # Tag of the TaskStream that pushed this task (live sessions: per-tenant
+    # / per-request accounting). Not part of the signature.
+    stream_tag: Optional[str] = None
 
     @property
     def signature(self) -> Tuple:

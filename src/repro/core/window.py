@@ -12,6 +12,14 @@ Faithful mechanics:
   EXECUTING; on completion the kernel is retired, removed from every
   upstream list, and vacancies are refilled from the FIFO.
 
+The input side has explicit **open/drain semantics** for live-fed sessions
+(§III-D: the FIFO is refilled *while* kernels execute). A window is born
+with its input closed (closed-batch compatibility: submit everything, then
+drain). ``open_input()`` marks it live: ``drained()`` then reports False
+even when the window is momentarily empty — the producer may still submit
+— until ``close_input()`` declares the stream complete. ``idle()`` is the
+weaker "empty right now" predicate either way.
+
 Note on Algorithm 1 as printed: it tests the incoming kernel's *writes*
 against residents' reads+writes (WAR + WAW) only. Correctness also needs
 RAW (incoming *reads* vs residents' writes) — §III-C's prose ("overlaps
@@ -87,6 +95,10 @@ class SchedulingWindow:
         self.slots: "collections.OrderedDict[int, _Slot]" = collections.OrderedDict()
         self.stats = WindowStats()
         self._seq = 0
+        # Live-session input state: False = closed batch (default; the
+        # producer has submitted everything it ever will), True = a
+        # session may still submit, so an empty window is idle, not done.
+        self._input_open = False
         # Reverse dependency edges: producer tid -> tids of resident
         # dependents. Maintained at insertion; consumed at retire so the
         # upstream update is O(out-degree), not O(window).
@@ -105,6 +117,25 @@ class SchedulingWindow:
     def submit_all(self, tasks: Iterable[Task]) -> None:
         self.fifo.extend(tasks)
         self._fill()
+
+    def open_input(self) -> None:
+        """Mark the input FIFO live: more submissions may arrive, so an
+        empty window is ``idle()`` but not ``drained()``."""
+        self._input_open = True
+
+    def close_input(self) -> None:
+        """Declare the input stream complete: once the window empties it is
+        ``drained()`` for good. Idempotent."""
+        self._input_open = False
+
+    @property
+    def input_open(self) -> bool:
+        return self._input_open
+
+    def fifo_depth(self) -> int:
+        """Kernels waiting in the input FIFO (not yet window-resident) —
+        the session backpressure signal."""
+        return len(self.fifo)
 
     # -- scheduler side ---------------------------------------------------
     def ready_tasks(self) -> List[Task]:
@@ -135,6 +166,12 @@ class SchedulingWindow:
         self._fill()
 
     def drained(self) -> bool:
+        """Closed AND complete: input stream ended and nothing is resident.
+        A live (``input_open``) window is never drained — see ``idle()``."""
+        return not self._input_open and not self.fifo and not self.slots
+
+    def idle(self) -> bool:
+        """Empty *right now* — but if the input is open, more may arrive."""
         return not self.fifo and not self.slots
 
     def resident(self) -> int:

@@ -133,15 +133,48 @@ class TaskStream:
     """The application-visible launch stream (single in-order queue).
 
     The paper's applications launch kernels into one stream; ACS re-extracts
-    the parallelism downstream. ``TaskStream`` simply records launches in
-    program order — schedulers consume it.
+    the parallelism downstream. ``TaskStream`` records launches in program
+    order — batch schedulers consume the recorded list.
+
+    A stream may also be **live**: constructed with a ``sink`` (a
+    :class:`~.session.SchedulerSession`, or any callable / object with
+    ``submit``), every ``push`` — i.e. every ``AcsKernel.launch`` — feeds
+    the consumer immediately, which is exactly the paper's §III-D picture
+    of the input FIFO being refilled while kernels execute. ``tag`` stamps
+    each pushed task's ``stream_tag`` (per-request / per-tenant accounting
+    in the serving runtime).
+
+    ``record=False`` stops the stream from retaining pushed tasks in
+    ``self.tasks`` — required for a *long-lived* live stream (a server's
+    persistent decode stream would otherwise hold every Task it ever
+    pushed, with its buffer references and closures, for the process
+    lifetime). The sink is then the only consumer.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, sink: Optional[Any] = None, tag: Optional[str] = None,
+                 record: bool = True) -> None:
         self.tasks: List[Task] = []
+        self.tag = tag
+        self._record = record
+        self._subscribers: List[Callable[[Task], Any]] = []
+        if sink is not None:
+            self.subscribe(sink)
+
+    def subscribe(self, sink: Any) -> None:
+        """Attach a live consumer: each subsequent ``push`` is forwarded to
+        ``sink.submit(task)`` (sessions) or ``sink(task)`` (callables)."""
+        fn = getattr(sink, "submit", sink)
+        if not callable(fn):
+            raise TypeError(f"stream sink {sink!r} is neither callable nor has .submit")
+        self._subscribers.append(fn)
 
     def push(self, task: Task) -> None:
-        self.tasks.append(task)
+        if self.tag is not None:
+            task.stream_tag = self.tag
+        if self._record:
+            self.tasks.append(task)
+        for fn in self._subscribers:
+            fn(task)
 
     def __len__(self) -> int:
         return len(self.tasks)

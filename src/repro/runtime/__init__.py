@@ -1,6 +1,12 @@
 """Runtime loops: fault-tolerant training, ACS-scheduled serving."""
 
-from .serve import ContinuousBatchingServer, Request
+from .serve import (
+    AdmissionQueueFull,
+    ContinuousBatchingServer,
+    Request,
+    SessionServer,
+)
 from .train import Trainer, TrainerConfig
 
-__all__ = ["Trainer", "TrainerConfig", "ContinuousBatchingServer", "Request"]
+__all__ = ["Trainer", "TrainerConfig", "ContinuousBatchingServer",
+           "SessionServer", "AdmissionQueueFull", "Request"]

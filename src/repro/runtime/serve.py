@@ -1,74 +1,104 @@
-"""Serving with continuous batching scheduled through the ACS window.
+"""Serving through the ACS window: a live session server + batch baseline.
 
-Each request owns a KV-cache slot. Every server iteration emits kernels
-into a single TaskStream, exactly like the paper's applications:
+Each request owns a KV-cache slot and emits kernels exactly like the
+paper's applications:
 
 * ``prefill(slot)``  — one task per newly admitted request; reads the
   token buffer, writes that slot's cache buffer.
-* ``decode(slots)``  — one task over the currently active slot set; reads
-  and writes those slots' caches.
+* ``decode(slots)``  — one task over the currently decodable slot set;
+  reads and writes those slots' caches.
 
 Because slots are disjoint buffers, the ACS window discovers that a new
-request's prefill is independent of the in-flight decode wave and runs
-them in the same wave — continuous batching *emerges from dependency
-scheduling* rather than being hand-coded. A slot's prefill -> decode ->
-decode chain stays serialized by its RAW hazards on the slot buffer.
+request's prefill is independent of the in-flight decode and co-schedules
+them — continuous batching *emerges from dependency scheduling* rather
+than being hand-coded. A slot's prefill -> decode -> decode chain stays
+serialized by its RAW hazards on the slot buffer.
 
-This is deliverable-(b)'s serving driver at reduced scale; at production
-scale the same stream semantics run per-host with the fused decode wave
-mapped onto the pjit decode_step (launch/steps.py).
+Two servers share the slot/admission machinery (:class:`_ServingCore`):
+
+* :class:`SessionServer` — the open-loop runtime (DESIGN.md §10). It owns
+  a persistent :class:`~..core.session.SchedulerSession`; admission emits
+  a request's *whole program* (prefill + its count-bounded per-slot decode
+  chain) through a live per-request ``TaskStream`` (``sink=`` the session,
+  ``tag=req{rid}``) *into the live window while other requests' chains are
+  still in flight*; per-task retirement callbacks harvest tokens and free
+  prompt buffers without ever draining the world.
+* :class:`ContinuousBatchingServer` — the per-step batch-drain baseline
+  (``step()`` rebuilds a stream and blocks the host each iteration). Kept
+  for its API stability and as the latency baseline ``bench_serving.py``
+  measures the session server against.
+
+Both apply multi-tenant fairness (admit for the tenant with the fewest
+active slots, oldest-first tie-break) and backpressure (bounded admission
+FIFO; ``submit`` raises :class:`AdmissionQueueFull` at capacity and stamps
+the observed queue depth on the request), and both free each request's
+prompt buffer once its prefill has retired — a long-running server cannot
+leak one ``req{rid}_prompt`` allocation per request.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Deque, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import BufferPool, TaskStream, WaveScheduler
+from ..core.executors import SerialExecutor
 from ..core.wrapper import AcsKernel
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ArchConfig
 
-__all__ = ["Request", "ContinuousBatchingServer"]
+__all__ = ["Request", "AdmissionQueueFull", "ContinuousBatchingServer",
+           "SessionServer"]
 
 _rid = itertools.count()
+
+
+class AdmissionQueueFull(RuntimeError):
+    """submit() refused: the bounded admission FIFO is at capacity — the
+    server's backpressure signal to producers."""
 
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray                  # [S] int32
     max_new: int = 8
+    tenant: str = "default"
     rid: int = dataclasses.field(default_factory=lambda: next(_rid))
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    t_arrival: float = 0.0              # perf_counter at submit
+    t_admit: float = 0.0                # perf_counter when a slot was granted
+    t_finish: float = 0.0               # perf_counter when the last token retired
+    queue_depth: int = 0                # admission FIFO depth observed at submit
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new
 
+    @property
+    def latency(self) -> float:
+        """End-to-end request latency (valid once finished)."""
+        return self.t_finish - self.t_arrival
 
-class ContinuousBatchingServer:
+
+class _ServingCore:
+    """Slots, kernels, and fair bounded admission — shared by both servers."""
+
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
-                 max_len: int = 64, window: int = 32):
+                 max_len: int = 64, max_queue: int = 256):
         assert cfg.frontend is None, "serving driver uses token models"
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.max_queue = max_queue
         self.pool = BufferPool()
-        # slot values are opaque pytrees (cache trees): the fused vmap
-        # batcher needs array operands, so waves execute via the serial
-        # executor — the window still builds multi-task waves, which is
-        # the dependency-schedule evidence the benchmarks read.
-        from ..core.executors import SerialExecutor
-
-        self.scheduler = WaveScheduler(window_size=window,
-                                       executor=SerialExecutor())
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.active: Dict[int, Request] = {}
         self.report_log: List[Dict] = []
 
@@ -104,11 +134,87 @@ class ContinuousBatchingServer:
         self._prefill_kernel = AcsKernel(name="req_prefill", fn=_prefill_fn)
         self._decode_kernel = AcsKernel(name="req_decode", fn=_decode_fn)
 
-    # -- client API -----------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int = 8) -> Request:
-        req = Request(prompt=np.asarray(prompt, np.int32), max_new=max_new)
+    # -- client API ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 8,
+               tenant: str = "default") -> Request:
+        """Enqueue a request. Raises :class:`AdmissionQueueFull` when the
+        bounded FIFO is at capacity; otherwise stamps the observed queue
+        depth on the request (the producer-visible backpressure signal)."""
+        if len(self.queue) >= self.max_queue:
+            raise AdmissionQueueFull(
+                f"admission queue at capacity ({self.max_queue}); retry later")
+        req = Request(prompt=np.asarray(prompt, np.int32), max_new=max_new,
+                      tenant=tenant)
+        req.t_arrival = time.perf_counter()
         self.queue.append(req)
+        req.queue_depth = len(self.queue)
         return req
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    # -- admission ----------------------------------------------------------
+    def _pick_next(self) -> Request:
+        """Multi-tenant fairness: admit for the tenant holding the fewest
+        active slots; oldest-first tie-break (deque order is arrival
+        order, so index order IS age order)."""
+        counts: Dict[str, int] = {}
+        for r in self.active.values():
+            counts[r.tenant] = counts.get(r.tenant, 0) + 1
+        best, best_load = 0, counts.get(self.queue[0].tenant, 0)
+        for i in range(1, len(self.queue)):
+            load = counts.get(self.queue[i].tenant, 0)
+            if load < best_load:
+                best, best_load = i, load
+        if best == 0:
+            return self.queue.popleft()
+        req = self.queue[best]
+        del self.queue[best]
+        return req
+
+    def _grant_slot(self, req: Request):
+        """Bind the request to a free slot and allocate its prompt buffer
+        (freed again when the prefill retires)."""
+        req.slot = self.free.pop(0)
+        req.t_admit = time.perf_counter()
+        self.active[req.slot] = req
+        tok_buf = self.pool.alloc(
+            (1, len(req.prompt)), np.int32, name=f"req{req.rid}_prompt",
+            value=jnp.asarray(req.prompt[None]),
+        )
+        return tok_buf
+
+    def _harvest_slot(self, s: int) -> Optional[Request]:
+        """Read the slot's freshly decoded token; return the request if it
+        finished (slot freed), else None."""
+        req = self.active[s]
+        _, tok, pos = self.slots[s].value
+        req.generated.append(int(np.asarray(tok)[0]))
+        if req.done or int(pos) >= self.max_len - 1:
+            req.t_finish = time.perf_counter()
+            del self.active[s]
+            self.free.append(s)
+            return req
+        return None
+
+
+class ContinuousBatchingServer(_ServingCore):
+    """Per-step batch-drain serving (the seed design, and the baseline the
+    session server is benchmarked against): every iteration rebuilds a
+    ``TaskStream``, runs it to empty through a closed-batch scheduler, and
+    blocks the host — iteration *i*'s decode can never overlap iteration
+    *i+1*'s prefill."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_len: int = 64, window: int = 32, max_queue: int = 256):
+        super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
+                         max_queue=max_queue)
+        # slot values are opaque pytrees (cache trees): the fused vmap
+        # batcher needs array operands, so waves execute via the serial
+        # executor — the window still builds multi-task waves, which is
+        # the dependency-schedule evidence the benchmarks read.
+        self.scheduler = WaveScheduler(window_size=window,
+                                       executor=SerialExecutor())
 
     def step(self) -> List[Request]:
         """One server iteration: admit + prefill new requests, decode the
@@ -116,14 +222,11 @@ class ContinuousBatchingServer:
         stream = TaskStream()
 
         # admit as many queued requests as there are free slots
+        prompt_bufs: List[str] = []
         while self.queue and self.free:
-            req = self.queue.pop(0)
-            req.slot = self.free.pop(0)
-            self.active[req.slot] = req
-            tok_buf = self.pool.alloc(
-                (1, len(req.prompt)), np.int32, name=f"req{req.rid}_prompt",
-                value=jnp.asarray(req.prompt[None]),
-            )
+            req = self._pick_next()
+            tok_buf = self._grant_slot(req)
+            prompt_bufs.append(tok_buf.name)
             self._prefill_kernel.launch(
                 stream, inputs=(self.slots[req.slot], tok_buf),
                 outputs=(self.slots[req.slot],),
@@ -141,6 +244,9 @@ class ContinuousBatchingServer:
         # executors jit/cache by signature; opaque pytree values need the
         # plain (uncompiled) path — dispatch counting still applies.
         report = self.scheduler.run(stream.tasks)
+        # prefills completed inside the drain: release the prompt buffers
+        for name in prompt_bufs:
+            self.pool.free(name)
         entry = report.as_dict()
         entry["tasks_this_run"] = sum(len(w) for w in report.waves)
         entry["waves_this_run"] = len(report.waves)
@@ -148,13 +254,9 @@ class ContinuousBatchingServer:
 
         finished = []
         for s in list(decoding):
-            req = self.active[s]
-            cache, tok, pos = self.slots[s].value
-            req.generated.append(int(tok[0]))
-            if req.done or pos >= self.max_len - 1:
+            req = self._harvest_slot(s)
+            if req is not None:
                 finished.append(req)
-                del self.active[s]
-                self.free.append(s)
         return finished
 
     def run_until_drained(self, max_iters: int = 200) -> List[Request]:
@@ -164,3 +266,131 @@ class ContinuousBatchingServer:
             if not self.queue and not self.active:
                 break
         return out
+
+
+class SessionServer(_ServingCore):
+    """Open-loop serving on a persistent scheduler session (DESIGN.md §10).
+
+    Admission emits a request's *entire* kernel program — prefill plus its
+    count-bounded decode chain — into the live window while other
+    requests' chains are still in flight; the window's RAW hazards
+    serialize each chain on its own slot buffer and co-schedule
+    independent chains. ``pump()`` is the non-blocking service iteration:
+    poll the session (retirement callbacks harvest tokens, free prompt
+    buffers, finish requests), then admit queued requests into freed
+    slots. Admission latency is bounded by the pump cadence, not by a full
+    window drain, and no mid-request host round-trip ever gates a decode
+    chain.
+
+    ``scheduler="frontier"`` (default) runs width-1 groups through the
+    async frontier — slot values are opaque pytrees, which vmap cannot
+    stack, so concurrency comes from overlapped in-flight groups rather
+    than batching. ``scheduler="wave"`` reproduces the seed's fused-wave
+    evidence (one slot's decode co-resident with another's prefill in a
+    single wave) with a serial executor.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
+                 max_len: int = 64, window: int = 32, max_queue: int = 256,
+                 scheduler: str = "frontier", max_inflight: int = 8):
+        super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
+                         max_queue=max_queue)
+        if scheduler == "frontier":
+            from ..core.frontier import FrontierSession
+
+            self.session = FrontierSession(window_size=window,
+                                           max_inflight=max_inflight,
+                                           max_group=1)
+        elif scheduler == "wave":
+            from ..core.session import WaveSession
+
+            self.session = WaveSession(window_size=window,
+                                       executor=SerialExecutor())
+        else:
+            raise ValueError(
+                f"session server scheduler must be 'frontier' or 'wave', got {scheduler!r}")
+        self.scheduler_name = scheduler
+        self._finished: List[Request] = []
+        # tid -> prefill | decode. A schedule trace like the session's
+        # ``waves``/``groups`` lists: report-lifetime state, so recycle the
+        # server session periodically under unbounded streams.
+        self.task_kinds: Dict[int, str] = {}
+        self.occupancy_samples: List[int] = []
+
+    # -- retirement callbacks (fire inside session.poll/drive) --------------
+    def _on_decode_retired(self, slot: int, last: bool) -> None:
+        req = self.active[slot]
+        _, tok, _ = self.slots[slot].value
+        req.generated.append(int(np.asarray(tok)[0]))
+        if last:
+            req.t_finish = time.perf_counter()
+            del self.active[slot]
+            self.free.append(slot)
+            self._finished.append(req)
+
+    # -- service loop --------------------------------------------------------
+    def _admit(self, req: Request) -> None:
+        """Emit the request's ENTIRE kernel program — prefill plus every
+        decode round — into the live window at admission. Termination is
+        count-based (``max_new`` bounded by ``max_len``), so the full
+        chain is known up front: the window serializes it via the slot
+        buffer's RAW hazards, co-schedules it against other slots' chains
+        (disjoint buffers), and the host only trails behind retirements
+        harvesting tokens — no mid-request host round-trip ever gates the
+        decode chain (§III-D)."""
+        tok_buf = self._grant_slot(req)
+        s = req.slot
+        # live per-request stream: AcsKernel.launch feeds the session's
+        # window directly, tagged for per-request accounting
+        stream = TaskStream(sink=self.session, tag=f"req{req.rid}", record=False)
+        task = self._prefill_kernel.launch(
+            stream, inputs=(self.slots[s], tok_buf), outputs=(self.slots[s],))
+        self.task_kinds[task.tid] = "prefill"
+        self.session.on_task_retired(
+            task, lambda _t, n=tok_buf.name: self.pool.free(n))  # no leak
+        rounds = max(1, min(req.max_new, self.max_len - 1 - len(req.prompt)))
+        bufs = (self.slots[s],)
+        for k in range(rounds):
+            dtask = self._decode_kernel.launch(stream, inputs=bufs, outputs=bufs)
+            self.task_kinds[dtask.tid] = "decode"
+            self.session.on_task_retired(
+                dtask,
+                lambda _t, s=s, last=(k == rounds - 1): self._on_decode_retired(s, last))
+
+    def pump(self) -> List[Request]:
+        """One non-blocking service iteration; returns newly finished
+        requests. Producers may call ``submit`` at any time between pumps
+        (or from another thread with a threaded session). Safe after
+        ``close()``: it then only drains requests that finished during the
+        closing flush."""
+        if not self.session.closed:
+            self.session.poll()
+            while self.queue and self.free:
+                self._admit(self._pick_next())
+            self.occupancy_samples.append(self.session.window.resident())
+        out, self._finished = self._finished, []
+        return out
+
+    def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
+        """Serve until queue and slots empty (blocking between pumps only
+        when nothing retired — the session's oldest-group sync)."""
+        out: List[Request] = []
+        for _ in range(max_iters):
+            done = self.pump()
+            out.extend(done)
+            if not self.queue and not self.active:
+                break
+            if not done:
+                self.session.drive()
+        return out
+
+    def close(self):
+        """Close the underlying session and log its final report. Chains
+        still in flight retire during the closing flush — collect those
+        requests with one more ``pump()`` after close."""
+        report = self.session.close()
+        entry = report.as_dict()
+        entry["occupancy_mean"] = (
+            float(np.mean(self.occupancy_samples)) if self.occupancy_samples else 0.0)
+        self.report_log.append(entry)
+        return report

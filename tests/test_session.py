@@ -1,0 +1,273 @@
+"""Live-fed scheduler sessions (DESIGN.md §10): interleaved submit/poll
+must be observationally equivalent to the serial baseline for every
+session policy; the window's open/drain semantics must distinguish "empty
+but session open" from "closed and complete"; and window size 1 must
+degenerate to serial even under live feeding.
+
+Streams are generated like test_scheduler_equivalence: random reads/writes
+over a shared pool with non-commutative arithmetic, so any illegal reorder
+changes the result.
+"""
+
+import numpy as np
+import pytest
+from _prophelper import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BufferPool,
+    SESSION_NAMES,
+    SchedulingWindow,
+    Task,
+    TaskStream,
+    make_session,
+    run_serial,
+)
+from repro.core.task import default_segments
+from repro.core.wrapper import AcsKernel
+
+D = 4
+
+
+def _axpy(x, y):
+    return 1.5 * x + y + 1.0
+
+
+def _mul(x, y):
+    return x * y - 0.5
+
+
+def _neg(x, y):
+    return -x + 0.25 * y
+
+
+OPS = {"axpy": _axpy, "mul": _mul, "neg": _neg}
+
+
+def build_stream(seed: int, n_tasks: int, n_buffers: int):
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    buffers = [
+        pool.alloc((D,), np.float32, value=jnp.asarray(rng.randn(D).astype(np.float32)))
+        for _ in range(n_buffers)
+    ]
+    tasks = []
+    names = list(OPS)
+    for _ in range(n_tasks):
+        op = names[rng.randint(len(names))]
+        i0, i1 = rng.randint(n_buffers), rng.randint(n_buffers)
+        o = rng.randint(n_buffers)
+        ins = (buffers[i0], buffers[i1])
+        outs = (buffers[o],)
+        r, w = default_segments(ins, outs)
+        tasks.append(
+            Task(opcode=op, fn=OPS[op], inputs=ins, outputs=outs,
+                 read_segments=r, write_segments=w)
+        )
+    return pool, buffers, tasks
+
+
+def final_values(buffers):
+    return np.stack([np.asarray(b.value) for b in buffers])
+
+
+def serial_ref(seed, n_tasks=30, n_buffers=6):
+    _, buffers, tasks = build_stream(seed, n_tasks, n_buffers)
+    run_serial(tasks)
+    return final_values(buffers)
+
+
+def feed_interleaved(session, tasks, seed, poll_prob=0.7):
+    """Submit in random-sized chunks with polls in between — the live-FIFO
+    pattern of paper §III-D."""
+    rng = np.random.RandomState(seed)
+    i = 0
+    while i < len(tasks):
+        k = 1 + rng.randint(5)
+        session.submit(tasks[i : i + k])
+        i += k
+        if rng.rand() < poll_prob:
+            session.poll()
+    return session.close()
+
+
+class TestInterleavedEquivalence:
+    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_matches_serial(self, kind, seed):
+        ref = serial_ref(seed)
+        _, buffers, tasks = build_stream(seed, 30, 6)
+        report = feed_interleaved(make_session(kind, window_size=8), tasks, seed)
+        np.testing.assert_allclose(final_values(buffers), ref, rtol=1e-6)
+        assert report.window_stats["retired"] == 30
+        assert sum(len(w) for w in report.waves) == 30
+
+    @given(st.integers(0, 10_000), st.integers(1, 17))
+    @settings(max_examples=10, deadline=None)
+    def test_property_any_seed_any_window(self, seed, window):
+        ref = serial_ref(seed, n_tasks=18, n_buffers=5)
+        _, buffers, tasks = build_stream(seed, 18, 5)
+        feed_interleaved(make_session("wave", window_size=window), tasks, seed)
+        np.testing.assert_allclose(final_values(buffers), ref, rtol=1e-6)
+
+    def test_window_one_live_feed_degenerates_to_serial(self):
+        ref = serial_ref(3)
+        _, buffers, tasks = build_stream(3, 30, 6)
+        report = feed_interleaved(make_session("wave", window_size=1), tasks, 3)
+        np.testing.assert_allclose(final_values(buffers), ref, rtol=1e-6)
+        assert all(len(w) == 1 for w in report.waves)
+        assert [w[0] for w in report.waves] == [t.tid for t in tasks]  # program order
+
+    def test_threaded_idle_workers_wake_on_late_submission(self):
+        """Workers parked on the condition variable (no spin) must pick up
+        work submitted long after the window went idle."""
+        ref = serial_ref(5)
+        _, buffers, tasks = build_stream(5, 30, 6)
+        s = make_session("threaded", window_size=8, num_streams=3)
+        s.submit(tasks[:10])
+        s.flush()  # window idles; workers park
+        assert s.outstanding == 0 and not s.window.drained()
+        s.submit(tasks[10:])
+        report = s.close()
+        np.testing.assert_allclose(final_values(buffers), ref, rtol=1e-6)
+        assert report.exec_stats["dispatches"] == 30
+
+    def test_frontier_executor_rejects_second_live_session(self):
+        """One live session per executor: opening a session over a ledger
+        holding another session's in-flight groups must fail loudly, not
+        steal (and mis-retire) those groups."""
+        from repro.core import FrontierSession, GroupExecutor
+
+        ex = GroupExecutor()
+        pool = BufferPool()
+        a = pool.alloc((D,), np.float32, value=jnp.ones(D))
+        b = pool.alloc((D,), np.float32, value=jnp.zeros(D))
+        r, w = default_segments((a, a), (b,))
+        task = Task(opcode="axpy", fn=_axpy, inputs=(a, a), outputs=(b,),
+                    read_segments=r, write_segments=w)
+        ex.launch([task])  # group now on the in-flight ledger
+        with pytest.raises(RuntimeError):
+            FrontierSession(executor=ex)
+        ex.sync_oldest()  # drained ledger: a new session may open
+        FrontierSession(executor=ex)
+
+    def test_frontier_inflight_survives_submissions(self):
+        """Groups launched before a submission retire normally after it —
+        the executor's in-flight ledger is session-lifetime state."""
+        ref = serial_ref(7)
+        _, buffers, tasks = build_stream(7, 30, 6)
+        s = make_session("frontier", window_size=8, max_inflight=4)
+        s.submit(tasks[:12])
+        s.poll()  # stages groups
+        s.poll()  # launches: groups now in flight
+        s.submit(tasks[12:])  # feed while in flight
+        report = s.close()
+        np.testing.assert_allclose(final_values(buffers), ref, rtol=1e-6)
+        assert sum(len(g.tids) for g in report.groups) == 30
+
+
+class TestDrainedVsClosed:
+    def test_open_empty_is_idle_not_drained(self):
+        w = SchedulingWindow(4)
+        assert w.drained()  # batch default: input closed from birth
+        w.open_input()
+        assert w.idle() and not w.drained()
+        w.close_input()
+        assert w.drained()
+
+    def test_live_window_with_work_is_neither(self):
+        _, _, tasks = build_stream(0, 3, 3)
+        w = SchedulingWindow(4)
+        w.open_input()
+        w.submit(tasks[0])
+        assert not w.idle() and not w.drained()
+        t = w.ready_tasks()[0]
+        w.mark_executing(t)
+        w.retire(t)
+        assert w.idle() and not w.drained()
+        w.close_input()
+        assert w.drained()
+
+    def test_submit_after_close_raises(self):
+        _, _, tasks = build_stream(0, 2, 2)
+        s = make_session("wave", window_size=4)
+        s.submit(tasks[0])
+        s.close()
+        with pytest.raises(RuntimeError):
+            s.submit(tasks[1])
+        with pytest.raises(RuntimeError):
+            s.close()  # double close
+
+
+class TestRetirementObservation:
+    def test_callbacks_fire_once_per_task_in_retire_order(self):
+        _, _, tasks = build_stream(2, 12, 4)
+        s = make_session("serial")
+        seen = []
+        s.submit(tasks, on_retire=lambda t: seen.append(t.tid))
+        s.close()
+        assert seen == [t.tid for t in tasks]  # serial: program order, once each
+
+    def test_ticket_and_late_callback(self):
+        _, _, tasks = build_stream(2, 4, 3)
+        s = make_session("wave", window_size=4)
+        s.submit(tasks)
+        tk = s.ticket(tasks[0])
+        assert not tk.done()
+        s.flush()
+        assert tk.done()
+        late = []
+        s.on_task_retired(tasks[1], lambda t: late.append(t.tid))  # already retired
+        assert late == [tasks[1].tid]
+        s.close()
+
+    def test_submit_reports_backlog_depth(self):
+        pool = BufferPool()
+        ins = [pool.alloc((D,), np.float32, value=jnp.ones(D)) for _ in range(5)]
+        outs = [pool.alloc((D,), np.float32, value=jnp.zeros(D)) for _ in range(5)]
+        tasks = []
+        for i in range(5):
+            r, w = default_segments((ins[i], ins[i]), (outs[i],))
+            tasks.append(Task(opcode="axpy", fn=_axpy, inputs=(ins[i], ins[i]),
+                              outputs=(outs[i],), read_segments=r, write_segments=w))
+        s = make_session("wave", window_size=2)
+        depth = s.submit(tasks)  # 2 resident + 3 queued in the input FIFO
+        assert depth == 5
+        assert s.backlog() == 5
+        assert s.window.fifo_depth() == 3
+        s.close()
+
+
+class TestLiveTaskStream:
+    def test_sink_feeds_session_and_tags_tasks(self):
+        """AcsKernel.launch into a sink-ed stream lands in the live window
+        immediately — the wrapper-to-window path of Fig 16/17, open-loop."""
+        s = make_session("wave", window_size=4)
+        pool = BufferPool()
+        a = pool.alloc((D,), np.float32, value=jnp.ones(D))
+        b = pool.alloc((D,), np.float32, value=jnp.zeros(D))
+        stream = TaskStream(sink=s, tag="tenant0")
+        kern = AcsKernel(name="axpy_live_test", fn=_axpy)
+        task = kern.launch(stream, inputs=(a, a), outputs=(b,))
+        assert s.backlog() == 1  # submitted by push, no explicit submit call
+        assert task.stream_tag == "tenant0"
+        s.close()
+        assert s.retired_by_tag == {"tenant0": 1}
+        np.testing.assert_allclose(np.asarray(b.value), 1.5 + 1.0 + 1.0)
+
+    def test_bad_sink_rejected(self):
+        with pytest.raises(TypeError):
+            TaskStream(sink=object())
+
+
+class TestBufferPoolFree:
+    def test_free_releases_name_without_recycling_addresses(self):
+        pool = BufferPool()
+        a = pool.alloc((D,), np.float32, name="x", value=jnp.ones(D))
+        pool.free("x")
+        assert "x" not in pool
+        b = pool.alloc((D,), np.float32, name="x", value=jnp.ones(D))
+        assert b.base > a.base  # bump pointer stays monotone
+        with pytest.raises(KeyError):
+            pool.free("never-allocated")
