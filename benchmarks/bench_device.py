@@ -20,6 +20,17 @@ same axis as the host schedulers:
 Timing is warm: each policy runs one throwaway stream first (populating
 jit / lowered-program caches, as a long-running runtime would), then a
 structurally identical fresh stream is timed.
+
+The ``device_session_recurring`` section is the persistent-window leg
+(DESIGN §2 A3): a recurring-structure multi-stream workload (decode-chain
+shaped — the same kernel chains over the same persistent state buffers,
+stream after stream) served three ways: per-stream device dispatch (one
+plan+pack+dispatch per stream), the live frontier session, and the
+persistent :class:`DeviceSession` (streams accumulate in the rolling
+window; recurring slices hit the session's structure-keyed plan cache and
+whole backlogs drain in one epoch dispatch). Columns: dispatches,
+plan-cache hits, host syncs — the host-round-trip reduction the
+persistent window buys.
 """
 
 from __future__ import annotations
@@ -28,7 +39,15 @@ import time
 
 import numpy as np
 
-from repro.core import DeviceWindowRunner, TaskStream
+from repro.core import (
+    BufferPool,
+    DeviceWindowRunner,
+    Task,
+    TaskStream,
+    make_session,
+    run_serial,
+)
+from repro.core.task import default_segments
 
 from .common import chosen_policies, emit, make_scheduler, opt, smoke
 
@@ -138,9 +157,126 @@ def compare(name: str, build) -> None:
                      entry["waste_frac"])
 
 
+# ---------------------------------------------------------------------------
+# Persistent window: recurring-structure multi-stream leg
+# ---------------------------------------------------------------------------
+
+def _axpy(x, y):
+    return 1.5 * x + y + 1.0
+
+
+def _mul(x, y):
+    return x * y - 0.5
+
+
+def _chain_universe(seed=0, n_chains=6, width=16):
+    """Persistent per-chain state buffers + one shared (read-only) weight —
+    the decode-chain shape: every stream applies the same kernel chain to
+    the same buffers, so stream structure AND arena addresses recur."""
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    states = [
+        pool.alloc((width,), np.float32, name=f"chain{i}",
+                   value=rng.randn(width).astype(np.float32))
+        for i in range(n_chains)
+    ]
+    weight = pool.alloc((width,), np.float32, name="weight",
+                        value=rng.randn(width).astype(np.float32))
+    return states, weight
+
+
+def _emit_chain_stream(states, weight, depth=4):
+    """One stream: per chain, ``depth`` RAW-serialized kernels; chains are
+    mutually independent (disjoint state buffers)."""
+    tasks = []
+    for s in states:
+        for d in range(depth):
+            fn = _axpy if d % 2 == 0 else _mul
+            ins, outs = (s, weight), (s,)
+            r, w = default_segments(ins, outs)
+            tasks.append(Task(opcode="axpy" if d % 2 == 0 else "mul", fn=fn,
+                              inputs=ins, outputs=outs,
+                              read_segments=r, write_segments=w))
+    return tasks
+
+
+def session_compare() -> None:
+    name = "device_session_recurring"
+    window = opt("window", 32)
+    n_streams = 4 if smoke() else 8
+    n_chains = 4 if smoke() else 6
+
+    def snap(states):
+        return np.stack([np.asarray(s.value) for s in states])
+
+    # serial reference over all K streams
+    states, weight = _chain_universe(n_chains=n_chains)
+    for _ in range(n_streams):
+        run_serial(_emit_chain_stream(states, weight))
+    ref = snap(states)
+    emit(name, "streams", n_streams)
+    emit(name, "tasks_per_stream", len(_emit_chain_stream(*_chain_universe(n_chains=n_chains))))
+
+    # per-stream device dispatch: one plan + pack + dispatch per stream
+    states, weight = _chain_universe(n_chains=n_chains)
+    runner = DeviceWindowRunner(window_size=window)
+    runner.run(_emit_chain_stream(states, weight))  # compile warm
+    states, weight = _chain_universe(n_chains=n_chains)
+    t0 = time.perf_counter()
+    dispatches = 0
+    for _ in range(n_streams):
+        report = runner.run(_emit_chain_stream(states, weight))
+        dispatches += report.exec_stats["dispatches"]
+    per_stream_wall = time.perf_counter() - t0
+    emit(name, "per_stream_wall_s", round(per_stream_wall, 4))
+    emit(name, "per_stream_dispatches", dispatches)
+    emit(name, "per_stream_matches_serial", int(np.array_equal(snap(states), ref)))
+
+    # live frontier session on the same pattern (per-group dispatches)
+    states, weight = _chain_universe(n_chains=n_chains)
+    fs = make_session("frontier", window_size=window)
+    t0 = time.perf_counter()
+    for _ in range(n_streams):
+        fs.submit(_emit_chain_stream(states, weight))
+        fs.poll()
+    freport = fs.close()
+    emit(name, "frontier_session_wall_s", round(time.perf_counter() - t0, 4))
+    emit(name, "frontier_session_dispatches", freport.exec_stats["dispatches"])
+    emit(name, "frontier_session_matches_serial",
+         int(np.array_equal(snap(states), ref)))
+
+    # persistent device session: first two streams poll per stream (epoch
+    # each — the second hits the plan cache), the rest accumulate in the
+    # rolling window and drain in ONE epoch dispatch.
+    states, weight = _chain_universe(n_chains=n_chains)
+    ds = make_session("device", window_size=window)
+    t0 = time.perf_counter()
+    for k in range(n_streams):
+        ds.submit(_emit_chain_stream(states, weight))
+        if k < 2:
+            ds.poll()
+    dreport = ds.close()
+    stats = dreport.session_stats
+    # session wall includes cold lowering/compilation of its two epoch
+    # structures (the per-stream runner above is compile-warmed); the
+    # dispatch/cache columns are the structural comparison.
+    emit(name, "session_wall_s", round(time.perf_counter() - t0, 4))
+    emit(name, "session_compiles", dreport.exec_stats["compiles"])
+    emit(name, "session_epochs", stats["epochs"])
+    emit(name, "session_dispatches", stats["device_dispatches"])
+    emit(name, "session_plan_cache_hits", stats["plan_cache_hits"])
+    emit(name, "session_plan_cache_misses", stats["plan_cache_misses"])
+    emit(name, "session_host_syncs", stats["host_syncs"])
+    emit(name, "session_matches_serial", int(np.array_equal(snap(states), ref)))
+    emit(name, "session_fewer_dispatches_than_per_stream",
+         int(stats["device_dispatches"] < dispatches))
+
+
 def main() -> None:
     for name, build in (_sim_leg(), _dyn_leg()):
         compare(name, build)
+    if "device" in chosen_policies(("device",)):
+        session_compare()
 
 
 if __name__ == "__main__":

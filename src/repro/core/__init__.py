@@ -6,6 +6,7 @@ from .buffers import Buffer, BufferPool, BufferView
 from .dag_baseline import DagRunner, build_full_dag, level_schedule
 from .device_dispatch import (
     DeviceOpRegistry,
+    DeviceSession,
     DeviceWindowRunner,
     lower_plan,
     plan_active_fraction,
@@ -51,6 +52,7 @@ __all__ = [
     "SlabArena",
     "pad_shape",
     "DeviceOpRegistry",
+    "DeviceSession",
     "DeviceWindowRunner",
     "lower_plan",
     "plan_active_fraction",

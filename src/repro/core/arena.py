@@ -25,6 +25,13 @@ workloads:
   class, the row count and the fraction of slab cells occupied by padding
   — the cost of running heterogeneous kernels through a uniform-indexed
   arena, which benchmarks surface next to dispatch counts.
+* The arena may be **persistent** (the `DeviceSession` rolling window):
+  ``pack_incremental`` keeps already-materialized slabs and appends only
+  rows added since the last pack (new submissions referencing new
+  buffers), and ``update_rows`` refreshes individual rows whose host
+  values changed (host-fallback writes between device epochs). Row and
+  class ids are stable for the arena's lifetime, so lowered dispatch
+  tables stay valid across epochs.
 """
 
 from __future__ import annotations
@@ -94,6 +101,9 @@ class SlabArena:
         # id(Buffer) -> (class, row); _rows holds the references, keeping
         # the ids stable for the arena's lifetime.
         self._addr: Dict[int, Tuple[int, int]] = {}
+        # Per-class count of rows already materialized into device slabs
+        # (the pack_incremental watermark).
+        self._packed_rows: List[int] = []
 
     # -- classification ----------------------------------------------------
     def class_of(self, buf: Buffer) -> ShapeClass:
@@ -114,6 +124,7 @@ class SlabArena:
             self._class_ids[cls] = cid
             self._classes.append(cls)
             self._rows.append([])
+            self._packed_rows.append(0)
         row = len(self._rows[cid])
         self._rows[cid].append(buf)
         self._addr[key] = (cid, row)
@@ -139,6 +150,10 @@ class SlabArena:
         return ArenaAddress(cid, row)
 
     # -- introspection -----------------------------------------------------
+    def __contains__(self, buf: Buffer) -> bool:
+        """True iff ``buf`` already holds a (class, row) assignment."""
+        return id(buf) in self._addr
+
     @property
     def classes(self) -> List[ShapeClass]:
         return list(self._classes)
@@ -205,7 +220,46 @@ class SlabArena:
             dtype = np.dtype(cls.dtype)
             rows = [self._padded_value(b, cls) for b in self._rows[cid]]
             slabs.append(jnp.stack(rows).astype(dtype))
+            self._packed_rows[cid] = len(self._rows[cid])
         return slabs
+
+    def pack_incremental(self, slabs: Optional[Sequence[Any]]) -> List[Any]:
+        """Persistent-arena pack: keep already-materialized slab rows (they
+        hold the latest device-side values) and append only rows added
+        since the last pack. ``slabs=None`` degenerates to a full
+        :meth:`pack`. New classes get fresh slabs; existing slabs are never
+        re-read from host values — host-side changes to already-packed
+        buffers go through :meth:`update_rows`."""
+        if slabs is None:
+            return self.pack()
+        out: List[Any] = list(slabs)
+        for cid, cls in enumerate(self._classes):
+            total = len(self._rows[cid])
+            packed = self._packed_rows[cid] if cid < len(slabs) else 0
+            if packed >= total:
+                continue
+            dtype = np.dtype(cls.dtype)
+            fresh = jnp.stack(
+                [self._padded_value(b, cls) for b in self._rows[cid][packed:]]
+            ).astype(dtype)
+            if cid < len(slabs):
+                out[cid] = jnp.concatenate([slabs[cid], fresh], axis=0)
+            else:
+                out.append(fresh)
+            self._packed_rows[cid] = total
+        return out
+
+    def update_rows(self, slabs: Sequence[Any],
+                    buffers: Iterable[Buffer]) -> List[Any]:
+        """Refresh the given buffers' slab rows from their current host
+        values (functional update): the re-sync path for buffers written
+        host-side between device epochs."""
+        out = list(slabs)
+        for buf in buffers:
+            cid, row = self._addr[id(buf)]
+            val = self._padded_value(buf, self._classes[cid])
+            out[cid] = out[cid].at[row].set(val.astype(out[cid].dtype))
+        return out
 
     def unpack(self, slabs: Sequence[Any],
                only: Optional[Iterable[Buffer]] = None) -> None:

@@ -25,6 +25,20 @@ Host involvement: ONE dispatch for the whole stream — vs one per kernel
 reduction ACS-HW claims, realized with jax control flow instead of SRAM
 next to a command processor.
 
+:class:`DeviceWindowRunner` is the *closed-batch* form: each ``run`` plans,
+lowers, packs a fresh arena, and dispatches once. :class:`DeviceSession`
+is the *persistent* form (DESIGN §2 A3): a live
+:class:`~.session.SchedulerSession` whose window accepts ``submit``-ed
+tasks at any time and drains them in **epochs** — each epoch lowers only
+the newly admitted window slice against a session-lifetime
+:class:`~.arena.SlabArena` (slabs stay device-resident across epochs;
+host values re-sync only at retire boundaries) with a structure-keyed plan
+cache at session scope, so recurring stream shapes skip re-lowering
+entirely. That is the rolling-window half of ACS-HW the per-stream runner
+cannot express: the dependency state and the operands live beside the
+device for the whole program, and a new submission costs one epoch
+dispatch, not a re-plan/repack of the world.
+
 The seed's uniform-shape interpreter survives as the *legacy path*
 (`compile_wave_plan` + `DeviceWindowRunner.execute_uniform`): operands
 must share one padded shape ``(D,)``, opcodes must be arity-<=3 registry
@@ -43,7 +57,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .arena import SlabArena
-from .scheduler import SchedulerReport
+from .buffers import Buffer, BufferView
+from .executors import ExecStats, SerialExecutor, group_by_signature
+from .scheduler import PLAN_MODES, SchedulerReport
+from .session import RetireCallback, SchedulerSession, TaskTicket
 from .task import Task, operand_base, operand_shape
 from .window import SchedulingWindow
 
@@ -56,6 +73,7 @@ __all__ = [
     "lower_plan",
     "DeviceStep",
     "DeviceWindowRunner",
+    "DeviceSession",
 ]
 
 MAX_ARITY = 3  # legacy uniform-slab path only; the arena path has no limit
@@ -562,8 +580,8 @@ class DeviceWindowRunner:
         max_group: Optional[int] = None,
         pad_multiple: int = 8,
     ):
-        if plan_mode not in ("wave", "frontier"):
-            raise ValueError(f"plan_mode must be 'wave' or 'frontier', got {plan_mode!r}")
+        if plan_mode not in PLAN_MODES:
+            raise ValueError(f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
         self.registry = registry if registry is not None else DeviceOpRegistry(strict=False)
         self.window_size = window_size
         self.plan_mode = plan_mode
@@ -572,6 +590,16 @@ class DeviceWindowRunner:
         self._compiled: Dict[Tuple, Tuple[Callable, Any]] = {}
         self._compiled_uniform: Dict[Tuple, Callable] = {}
         self.stats: Dict[str, Any] = {}
+
+    def session(self) -> "DeviceSession":
+        """Open a persistent :class:`DeviceSession` sharing this runner's
+        opcode registry (each session owns its own arena — buffer rows bind
+        to one session's slabs for its lifetime)."""
+        return DeviceSession(window_size=self.window_size,
+                             registry=self.registry,
+                             plan_mode=self.plan_mode,
+                             max_group=self.max_group,
+                             pad_multiple=self.pad_multiple)
 
     # -- shared planning ---------------------------------------------------
     def _plan(self, tasks: Sequence[Task]):
@@ -714,4 +742,357 @@ class DeviceWindowRunner:
         report.plan_seconds = plan_time  # type: ignore[attr-defined]
         report.plan_mode = self.plan_mode  # type: ignore[attr-defined]
         report.plan_active_fraction = plan_active_fraction(plan)  # type: ignore[attr-defined]
+        return report
+
+
+# ---------------------------------------------------------------------------
+# Persistent device window: the live-session form of the ACS-HW analogue
+# ---------------------------------------------------------------------------
+
+def _device_lowerable(task: Task) -> bool:
+    """True iff every operand can live in the slab arena: array-valued (or
+    not-yet-produced) buffers whose values match their declared shapes.
+    Opaque pytree values (e.g. serving KV-cache tuples) and raw byte views
+    fall back to the host path inside the epoch."""
+    for op in tuple(task.inputs) + tuple(task.outputs):
+        if isinstance(op, BufferView) and op.row_start is None:
+            return False
+        base = operand_base(op)
+        val = base.value
+        if val is None:
+            continue
+        shape = getattr(val, "shape", None)
+        if shape is None or getattr(val, "dtype", None) is None:
+            return False
+        if tuple(shape) != tuple(base.shape):
+            return False
+    return True
+
+
+class DeviceSession(SchedulerSession):
+    """Persistent device-resident window: the rolling, live-fed ACS-HW
+    analogue (DESIGN §2 A3).
+
+    Producers ``submit()`` tasks (or feed a ``TaskStream(sink=session)``)
+    at any time; each ``poll``/``drive`` drains everything admitted so far
+    as one **epoch**:
+
+    1. the live window is planned symbolically (wave fronts or frontier
+       groups, exactly like the per-stream runner) — cross-epoch RAW/WAR
+       edges were already resolved at insertion by the window, and epoch
+       ordering retires them;
+    2. the epoch's slice is lowered against the **session-lifetime arena**:
+       slabs stay device-resident across epochs (only rows for newly seen
+       buffers are appended), and a **structure-keyed plan cache** maps a
+       recurring (signatures × arena addresses) slice straight to its
+       lowered tables and compiled program — re-lowering is skipped
+       entirely, the common case for RL sim steps and decode chains;
+    3. the slice executes in ONE dispatch; host values re-sync only at
+       retire boundaries (an epoch whose tasks have listeners, completion
+       callbacks, or tickets; an explicit ``flush``/``close``/``sync``) —
+       ``host_syncs`` counts them.
+
+    Tasks whose operands cannot live in the arena (opaque pytree values,
+    raw byte views) execute host-side *within* the epoch, interleaved in
+    plan order with slab re-sync at each device/host transition — so the
+    session still accepts any workload the host sessions accept.
+
+    Device residency is a CONTRACT with the producer: while the session is
+    open, buffers it has packed must be written only *through submitted
+    tasks* — a direct host-side write to ``buf.value`` between epochs is
+    invisible to the slabs (the host sessions would honor it) and the
+    stale row wins. Symmetrically, reading ``buf.value`` after a bare
+    ``poll()`` (no callback/ticket on the task) may observe a pre-epoch
+    value until the next retire-boundary sync; call ``sync()`` (or
+    ``flush``/``close``) before trusting direct reads.
+
+    Per-epoch stats land in ``epoch_log`` and the aggregate in
+    ``session_stats()`` / ``report.session_stats``: epochs, device
+    dispatches, plan-cache hits/misses, host syncs, padding waste.
+    """
+
+    def __init__(
+        self,
+        window_size: int = 32,
+        registry: Optional[DeviceOpRegistry] = None,
+        plan_mode: str = "wave",
+        max_group: Optional[int] = None,
+        pad_multiple: int = 8,
+    ):
+        if plan_mode not in PLAN_MODES:
+            raise ValueError(
+                f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
+        super().__init__(window_size)
+        self.registry = registry if registry is not None else DeviceOpRegistry(strict=False)
+        self.plan_mode = plan_mode
+        self.max_group = max_group
+        self.arena = SlabArena(pad_multiple=pad_multiple)
+        self._slabs: Optional[List[Any]] = None
+        # id(Buffer) -> Buffer whose freshest value lives device-side
+        # (slab newer than host) / host-side (host newer than slab).
+        self._device_dirty: Dict[int, Buffer] = {}
+        self._host_dirty: Dict[int, Buffer] = {}
+        # structure key (plan signatures x arena addresses) -> lowered
+        # (run_fn, tables, n_steps): the session-scope plan cache.
+        self._plan_cache: Dict[Tuple, Tuple] = {}
+        # static step-spec structure -> compiled program (shared across
+        # plan-cache entries that differ only in row addressing).
+        self._programs: Dict[Tuple, Tuple[Callable, Any]] = {}
+        self.stats = ExecStats()
+        # In-epoch host-fallback path: a plain serial executor whose stats
+        # object IS this session's, so its per-task dispatch/compile/jit
+        # bookkeeping lands in the one report without duplication.
+        self._host_exec = SerialExecutor()
+        self._host_exec.stats = self.stats
+        self.epochs = 0
+        self.device_dispatches = 0
+        self.host_task_dispatches = 0
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+        self.host_syncs = 0
+        self.epoch_log: List[Dict[str, Any]] = []
+
+    # -- epoch planning ----------------------------------------------------
+    def _plan_epoch(self) -> List[List[Task]]:
+        """Drain the live window symbolically into this epoch's plan:
+        wave fronts or one homogeneous frontier group per step. The window
+        retires (and refills from the FIFO) during planning — execution
+        follows, then retirement callbacks fire."""
+        plan: List[List[Task]] = []
+        while not self.window.idle():
+            ready = self.window.ready_tasks()
+            if not ready:
+                raise RuntimeError(
+                    "device session stall: no READY kernels but window non-empty")
+            if self.plan_mode == "frontier":
+                group = group_by_signature(ready)[0]
+                if self.max_group is not None:
+                    group = group[: self.max_group]
+            else:
+                group = ready
+            for t in group:
+                self.window.mark_executing(t)
+            self.window.retire_many(group)
+            plan.append(group)
+        return plan
+
+    # -- sync bookkeeping --------------------------------------------------
+    def _sync_to_host(self, buffers: Iterable[Buffer]) -> None:
+        """Write the given buffers' slab rows back to host values (ONE
+        blocking sync, counted)."""
+        bufs = [b for b in buffers if id(b) in self._device_dirty]
+        if not bufs or self._slabs is None:
+            return
+        jax.block_until_ready(self._slabs)
+        self.arena.unpack(self._slabs, only=bufs)
+        for b in bufs:
+            del self._device_dirty[id(b)]
+        self.host_syncs += 1
+
+    def sync(self) -> None:
+        """Force every device-resident value back to host buffers."""
+        with self._lock:
+            self._sync_to_host(list(self._device_dirty.values()))
+
+    # Observers registered AFTER an unwatched epoch retired their task hit
+    # the base class's fire-immediately paths — sync first, so a late
+    # callback/ticket holder reads host values as fresh as an early one's.
+    def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
+        with self._lock:
+            if task.tid in self._retired_tids:
+                self._sync_to_host(list(self._device_dirty.values()))
+        super().on_task_retired(task, cb)
+
+    def ticket(self, task: Task) -> TaskTicket:
+        with self._lock:
+            if task.tid in self._retired_tids:
+                self._sync_to_host(list(self._device_dirty.values()))
+            return super().ticket(task)
+
+    # -- device / host halves ----------------------------------------------
+    def _structure_key(self, dev_plan: Sequence[Sequence[Task]]) -> Tuple:
+        def opkey(op):
+            a = self.arena.address(op)
+            return (a.class_id, a.row, a.row_start, a.row_count)
+
+        return tuple(
+            tuple(
+                (t.signature,
+                 tuple(opkey(o) for o in t.inputs),
+                 tuple(opkey(o) for o in t.outputs))
+                for t in step
+            )
+            for step in dev_plan
+        )
+
+    def _execute_device(self, dev_plan: List[List[Task]]) -> None:
+        tasks = [t for step in dev_plan for t in step]
+        self.arena.add_tasks(tasks)
+        key = (self.plan_mode, self._structure_key(dev_plan))
+        cached = self._plan_cache.get(key)
+        if cached is None:
+            steps = lower_plan(dev_plan, self.registry, self.arena)
+            # Program cache keys on step structure alone: jit retraces by
+            # itself when slab shapes grow, so keying on the arena layout
+            # would only manufacture duplicate jit wrappers.
+            spec_key = tuple(st.spec for st in steps)
+            prog = self._programs.get(spec_key)
+            if prog is None:
+                prog = _build_program(steps)
+                self._programs[spec_key] = prog
+                self.stats.compiles += 1
+            run_fn, runs = prog
+            tables = _run_tables(steps, runs)
+            cached = (run_fn, tables, len(steps))
+            self._plan_cache[key] = cached
+            self.plan_cache_misses += 1
+        else:
+            self.plan_cache_hits += 1
+        run_fn, tables, n_steps = cached
+
+        # Persistent slabs: append rows for newly seen buffers, refresh
+        # rows whose host values changed since they were packed.
+        self._slabs = self.arena.pack_incremental(self._slabs)
+        stale = [b for b in self._host_dirty.values() if b in self.arena]
+        if stale:
+            self._slabs = self.arena.update_rows(self._slabs, stale)
+            for b in stale:
+                del self._host_dirty[id(b)]
+
+        out = run_fn(tuple(self._slabs), tables)
+        self._slabs = list(out)
+        self.device_dispatches += 1
+        self.stats.dispatches += 1
+        self.stats.tasks_run += len(tasks)
+        for step in dev_plan:
+            self.stats.wave_widths.append(len(step))
+        for t in tasks:
+            for op in t.outputs:
+                b = operand_base(op)
+                self._device_dirty[id(b)] = b
+                self._host_dirty.pop(id(b), None)
+
+    def _execute_host_step(self, tasks: List[Task]) -> None:
+        """In-epoch host fallback (opaque operands): per-task jit dispatch,
+        reading fresh values back from the slabs first when a device step
+        produced them. Retirement fires per task, so chained callbacks
+        (serving decode harvests) observe each intermediate value exactly
+        as they would under the host sessions."""
+        need: Dict[int, Buffer] = {}
+        for t in tasks:
+            for op in tuple(t.inputs) + tuple(t.outputs):
+                base = operand_base(op)
+                if id(base) in self._device_dirty:
+                    need[id(base)] = base
+        if need:
+            self._sync_to_host(need.values())
+        for task in tasks:
+            self._host_exec.execute_wave([task])
+            self.host_task_dispatches += 1
+            for op in task.outputs:
+                b = operand_base(op)
+                self._host_dirty[id(b)] = b
+                self._device_dirty.pop(id(b), None)
+            self.waves.append([task.tid])
+            self._note_retired(task)
+
+    # -- the epoch ----------------------------------------------------------
+    def _pump(self) -> bool:
+        if self.window.idle():
+            return False
+        self._run_epoch()
+        return True
+
+    def _retire_device_segment(self, dev_plan: List[List[Task]]) -> None:
+        """Retire a just-dispatched device segment. Retirement observers —
+        listeners, per-task callbacks, ticket holders — read host values,
+        so a watched segment syncs the slabs back first (one blocking sync
+        — the retire boundary); observation granularity is the segment,
+        since intermediate slab states inside its single dispatch are
+        never materialized."""
+        watched = bool(self._listeners) or any(
+            t.tid in self._watchers or t.tid in self._tickets
+            for step in dev_plan for t in step)
+        if watched:
+            self._sync_to_host(list(self._device_dirty.values()))
+        for step in dev_plan:
+            self.waves.append([t.tid for t in step])
+            for t in step:
+                self._note_retired(t)
+
+    def _run_epoch(self) -> None:
+        plan = self._plan_epoch()
+        syncs_before = self.host_syncs
+        hits_before = self.plan_cache_hits
+        n_device_dispatches = 0
+        n_host_tasks = 0
+        # Walk the plan in order, batching maximal runs of device-lowerable
+        # steps into single dispatches; tasks within one plan step are
+        # independent, so splitting a step between the device and host
+        # halves preserves every cross-step dependency (plan order).
+        pending: List[List[Task]] = []
+        for step in plan:
+            dev = [t for t in step if _device_lowerable(t)]
+            host = [t for t in step if not _device_lowerable(t)]
+            if dev:
+                pending.append(dev)
+            if host:
+                if pending:
+                    self._execute_device(pending)
+                    n_device_dispatches += 1
+                    self._retire_device_segment(pending)
+                    pending = []
+                n_host_tasks += len(host)
+                self._execute_host_step(host)
+        if pending:
+            self._execute_device(pending)
+            n_device_dispatches += 1
+            self._retire_device_segment(pending)
+
+        self.epochs += 1
+        self.epoch_log.append({
+            "epoch": self.epochs,
+            "tasks": sum(len(step) for step in plan),
+            "plan_steps": len(plan),
+            "device_dispatches": n_device_dispatches,
+            "host_tasks": n_host_tasks,
+            "plan_cache_hits": self.plan_cache_hits - hits_before,
+            "host_syncs": self.host_syncs - syncs_before,
+        })
+
+    # -- lifecycle ----------------------------------------------------------
+    def flush(self) -> None:
+        """Drain everything submitted so far, then sync device-resident
+        values back to host buffers (the observable retire boundary)."""
+        super().flush()
+        self.sync()
+
+    def session_stats(self) -> Dict[str, Any]:
+        """Aggregate session counters (the per-epoch detail is in
+        ``epoch_log``)."""
+        with self._lock:
+            return {
+                "epochs": self.epochs,
+                "device_dispatches": self.device_dispatches,
+                "host_task_dispatches": self.host_task_dispatches,
+                "plan_cache_hits": self.plan_cache_hits,
+                "plan_cache_misses": self.plan_cache_misses,
+                "compiled_programs": len(self._programs),
+                "host_syncs": self.host_syncs,
+                "n_classes": self.arena.n_classes(),
+                "padding_waste_frac": round(self.arena.total_waste_frac(), 4),
+            }
+
+    def _finalize(self) -> SchedulerReport:
+        wall = time.perf_counter() - self._t0
+        self.stats.exec_seconds = wall
+        report = SchedulerReport(self.window, self.stats, wall, self.waves)
+        report.plan_mode = self.plan_mode  # type: ignore[attr-defined]
+        report.session_stats = self.session_stats()  # type: ignore[attr-defined]
+        report.arena_stats = {  # type: ignore[attr-defined]
+            "n_classes": self.arena.n_classes(),
+            "total_waste_frac": round(self.arena.total_waste_frac(), 4),
+            "per_class": self.arena.padding_waste(),
+            "device_steps": sum(e["plan_steps"] for e in self.epoch_log),
+        }
         return report

@@ -181,10 +181,11 @@ def run_serial(stream: Iterable[Task]) -> SchedulerReport:
 
 
 SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier", "device")
-# Policies that can run as live-fed sessions ("device" compiles closed
-# batches — plan lowering needs the whole window's future, so it has no
-# open-loop form).
-SESSION_NAMES = ("serial", "wave", "threaded", "frontier")
+# Policies that can run as live-fed sessions. "device" is the persistent
+# device-resident window (DeviceSession): submissions accumulate in the
+# live window and drain in one-dispatch epochs over a session-lifetime
+# slab arena with a structure-keyed plan cache.
+SESSION_NAMES = ("serial", "wave", "threaded", "frontier", "device")
 PLAN_MODES = ("wave", "frontier")
 
 
@@ -223,18 +224,24 @@ def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
 
 
 def make_session(name: str, window_size: int = 32, num_streams: int = 4,
-                 max_inflight: int = 8, max_group: Optional[int] = None):
+                 max_inflight: int = 8, max_group: Optional[int] = None,
+                 plan_mode: str = "wave"):
     """Factory over the live scheduler sessions (DESIGN.md §10): returns an
     open :class:`~.session.SchedulerSession` that producers feed with
     ``submit()`` while it dependency-checks, launches, and retires
     concurrently in flight; ``close()`` returns the usual report.
 
     ``"serial"`` is a window-1 session (program order, one dispatch per
-    kernel) — useful as the live-fed equivalence baseline. ``"device"`` has
-    no session form: the device runner compiles closed window batches.
+    kernel) — useful as the live-fed equivalence baseline. ``"device"`` is
+    the persistent device-resident window (DESIGN §2 A3): submissions
+    accumulate and drain in one-dispatch epochs over a session-lifetime
+    slab arena; ``plan_mode`` selects its plan lowering and only affects
+    this session kind.
     """
     from .session import ThreadedSession, WaveSession
 
+    if plan_mode not in PLAN_MODES:
+        raise ValueError(f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
     if name == "serial":
         return WaveSession(window_size=1, executor=SerialExecutor())
     if name == "wave":
@@ -247,8 +254,8 @@ def make_session(name: str, window_size: int = 32, num_streams: int = 4,
         return FrontierSession(window_size=window_size,
                                max_inflight=max_inflight, max_group=max_group)
     if name == "device":
-        raise ValueError(
-            "the device runner lowers closed window batches (plan_mode) and "
-            f"has no live session; choose from {SESSION_NAMES}"
-        )
+        from .device_dispatch import DeviceSession
+
+        return DeviceSession(window_size=window_size, plan_mode=plan_mode,
+                             max_group=max_group)
     raise ValueError(f"unknown session {name!r}; choose from {SESSION_NAMES}")

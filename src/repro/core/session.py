@@ -120,14 +120,14 @@ class SchedulerSession:
                     self._watchers.setdefault(t.tid, []).append(on_retire)
                 self._submitted += 1
                 self.window.submit(t)
-            depth = self.window.fifo_depth() + self.window.resident()
+            depth = self.window.backlog()
             self._wake()
         return depth
 
     def backlog(self) -> int:
         """Tasks submitted but not yet retired (FIFO + resident)."""
         with self._lock:
-            return self.window.fifo_depth() + self.window.resident()
+            return self.window.backlog()
 
     @property
     def closed(self) -> bool:

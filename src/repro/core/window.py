@@ -137,6 +137,11 @@ class SchedulingWindow:
         the session backpressure signal."""
         return len(self.fifo)
 
+    def backlog(self) -> int:
+        """Kernels submitted but not yet retired (FIFO + resident): the
+        depth a session reports to producers as its backpressure signal."""
+        return len(self.fifo) + len(self.slots)
+
     # -- scheduler side ---------------------------------------------------
     def ready_tasks(self) -> List[Task]:
         """All READY kernels, oldest-first (they may launch concurrently)."""

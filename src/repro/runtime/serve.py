@@ -287,8 +287,15 @@ class SessionServer(_ServingCore):
     stack, so concurrency comes from overlapped in-flight groups rather
     than batching. ``scheduler="wave"`` reproduces the seed's fused-wave
     evidence (one slot's decode co-resident with another's prefill in a
-    single wave) with a serial executor.
+    single wave) with a serial executor. ``scheduler="device"`` serves
+    through the persistent :class:`~..core.device_dispatch.DeviceSession`:
+    admitted chains drain in whole-window epochs (slot values are opaque
+    cache pytrees, so every serving kernel takes the session's in-epoch
+    host path — the evidence here is the epoch/admission structure and the
+    per-epoch stats, not arena residency).
     """
+
+    SCHEDULERS = ("frontier", "wave", "device")
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 64, window: int = 32, max_queue: int = 256,
@@ -306,9 +313,14 @@ class SessionServer(_ServingCore):
 
             self.session = WaveSession(window_size=window,
                                        executor=SerialExecutor())
+        elif scheduler == "device":
+            from ..core.device_dispatch import DeviceSession
+
+            self.session = DeviceSession(window_size=window)
         else:
             raise ValueError(
-                f"session server scheduler must be 'frontier' or 'wave', got {scheduler!r}")
+                f"session server scheduler must be one of {self.SCHEDULERS}, "
+                f"got {scheduler!r}")
         self.scheduler_name = scheduler
         self._finished: List[Request] = []
         # tid -> prefill | decode. A schedule trace like the session's
@@ -392,5 +404,7 @@ class SessionServer(_ServingCore):
         entry = report.as_dict()
         entry["occupancy_mean"] = (
             float(np.mean(self.occupancy_samples)) if self.occupancy_samples else 0.0)
+        if hasattr(report, "session_stats"):  # device session epoch counters
+            entry["device_session"] = dict(report.session_stats)
         self.report_log.append(entry)
         return report

@@ -1,0 +1,108 @@
+"""The ``benchmarks/run.py --smoke --json=PATH`` artifact is what CI
+uploads as the machine-readable perf trajectory — if its schema drifts (or
+the writer silently stops emitting rows), the upload goes stale without
+any test noticing. Two layers:
+
+* a fast in-process test drives ``run.main()`` over a stub section and
+  validates the full artifact schema (keys, row types, flag echo,
+  timings);
+* a ``slow``-lane test runs the REAL ``--smoke`` leg in a subprocess and
+  checks every smoke section produced rows — the exact artifact CI
+  uploads.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _validate_schema(payload, expect_sections=None):
+    """The BENCH_*.json contract: top-level keys, row shape, non-empty
+    results, a timing per executed section."""
+    assert set(payload) == {"flags", "sections", "timings_seconds", "results"}
+    assert isinstance(payload["flags"], dict)
+    assert isinstance(payload["sections"], list) and payload["sections"]
+    assert isinstance(payload["timings_seconds"], dict)
+    assert set(payload["timings_seconds"]) == set(payload["sections"])
+    for t in payload["timings_seconds"].values():
+        assert isinstance(t, (int, float)) and t >= 0
+    assert isinstance(payload["results"], list) and payload["results"]
+    emitted_sections = set()
+    for row in payload["results"]:
+        assert set(row) == {"section", "metric", "value"}, row
+        assert isinstance(row["section"], str) and row["section"]
+        assert isinstance(row["metric"], str) and row["metric"]
+        assert isinstance(row["value"], (int, float, str, bool)), row
+        emitted_sections.add(row["section"])
+    if expect_sections is not None:
+        for name in expect_sections:
+            assert any(s == name or s.startswith(name) for s in emitted_sections), (
+                f"section {name!r} emitted no rows; emitted: {sorted(emitted_sections)}")
+
+
+class _StubSection:
+    """Stands in for a bench module: emits a few typed rows."""
+
+    @staticmethod
+    def main():
+        from benchmarks.common import emit
+
+        emit("stub", "int_metric", 3)
+        emit("stub", "float_metric", 1.25)
+        emit("stub", "str_metric", "a|b")
+
+
+def test_json_artifact_schema_fast(tmp_path, monkeypatch):
+    import benchmarks.run as run
+    from benchmarks import common
+
+    path = tmp_path / "bench.json"
+    monkeypatch.setattr(run, "SECTIONS", {"stub": _StubSection})
+    monkeypatch.setattr(run, "SMOKE_SECTIONS", ("stub",))
+    monkeypatch.setattr(common, "RESULTS", [])
+    monkeypatch.setattr(common, "OPTIONS", {})
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--smoke", "--window=8", f"--json={path}"])
+    run.main()
+    payload = json.loads(path.read_text())
+    _validate_schema(payload, expect_sections=["stub"])
+    assert payload["flags"]["smoke"] == "1"
+    assert payload["flags"]["window"] == "8"
+    assert payload["sections"] == ["stub"]
+    assert len(payload["results"]) == 3
+
+
+def test_json_flag_requires_path(monkeypatch):
+    import benchmarks.run as run
+
+    monkeypatch.setattr(sys, "argv", ["run.py", "--json="])
+    with pytest.raises(SystemExit, match="--json expects a path"):
+        run.main()
+
+
+@pytest.mark.slow  # runs the real smoke benchmark leg (~1-2 min)
+def test_smoke_json_artifact_real(tmp_path):
+    """End-to-end: the exact command CI runs must produce a schema-valid,
+    non-empty artifact covering every smoke section."""
+    import benchmarks.run as run
+
+    path = tmp_path / "bench-smoke.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # subprocess budget stays below the slow lane's --timeout=300 per-test
+    # ceiling (ci.yml), so a hung benchmark fails through TimeoutExpired
+    # with captured stderr instead of pytest-timeout killing the test
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke", f"--json={path}"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=270,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(path.read_text())
+    _validate_schema(payload, expect_sections=run.SMOKE_SECTIONS)
+    assert payload["sections"] == list(run.SMOKE_SECTIONS)

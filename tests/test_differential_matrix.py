@@ -1,0 +1,209 @@
+"""THE differential matrix: every execution policy in the public registries
+— batch schedulers (``SCHEDULER_NAMES``) and live sessions
+(``SESSION_NAMES``) — must be observationally equivalent to ``run_serial``
+on the same streams, across three stream families:
+
+* ``sim``       — the physics engine's irregular kernel stream (row-view
+                  aliasing, input-dependent contacts, variable arity);
+* ``dyn``       — the dynamic-routing DNN stream (mixed shape classes,
+                  deep dependency chains);
+* ``mixed_tag`` — two tagged tenant streams interleaved over shared
+                  buffers (RAW/WAR/WAW hazards across tenants), the live
+                  serving shape.
+
+Any new scheduler or session is covered by adding its name to the registry
+in ``core/scheduler.py`` — this module parametrizes over the registries,
+not over a hand-maintained list. Sessions are additionally fed
+*interleaved* (random submit chunks with polls in between), the §III-D
+live-FIFO pattern.
+
+The factory functions themselves are also under test: unknown names and
+plan modes must fail loudly with the valid choices in the message.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BufferPool,
+    PLAN_MODES,
+    SCHEDULER_NAMES,
+    SESSION_NAMES,
+    Task,
+    TaskStream,
+    make_scheduler,
+    make_session,
+    run_serial,
+)
+from repro.core.task import default_segments
+from repro.core.wrapper import AcsKernel
+
+D = 4
+WINDOW = 16
+
+
+# ---------------------------------------------------------------------------
+# Stream builders: each returns (snapshot_fn, tasks). snapshot_fn reads the
+# final observable state as one ndarray AFTER the tasks ran.
+# ---------------------------------------------------------------------------
+
+def _build_sim(seed=0):
+    from repro.sim import ENVIRONMENTS, PhysicsEngine
+
+    eng = PhysicsEngine(ENVIRONMENTS["cheetah"], n_envs=2, group_size=1,
+                        seed=seed)
+    stream = TaskStream()
+    eng.emit_batch(stream, 1)
+    return eng.state_snapshot, stream.tasks
+
+
+def _build_dyn(seed=0):
+    from repro.dyn import WORKLOADS
+
+    init_fn, build_fn, _ = WORKLOADS["dynamic_routing"]
+    rng = np.random.RandomState(seed)
+    x = rng.randn(1, 3, 32, 32).astype(np.float32)
+    params = init_fn(0)
+    stream = TaskStream()
+    out = build_fn(params, stream, x)
+    return (lambda: np.asarray(out.value)), stream.tasks
+
+
+def _axpy(x, y):
+    return 1.5 * x + y + 1.0
+
+
+def _mul(x, y):
+    return x * y - 0.5
+
+
+def _build_mixed_tag(seed=0):
+    """Two tenants launch kernels into tagged streams over a SHARED buffer
+    pool, interleaved in program order — cross-tenant RAW/WAR/WAW hazards
+    must serialize exactly as the serial baseline does."""
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    bufs = [
+        pool.alloc((D,), np.float32,
+                   value=jnp.asarray(rng.randn(D).astype(np.float32)))
+        for _ in range(6)
+    ]
+    kernels = {"axpy": AcsKernel(name="axpy_mixed", fn=_axpy),
+               "mul": AcsKernel(name="mul_mixed", fn=_mul)}
+    streams = {"tenantA": TaskStream(tag="tenantA"),
+               "tenantB": TaskStream(tag="tenantB")}
+    tasks = []
+    for _ in range(24):
+        tag = "tenantA" if rng.rand() < 0.5 else "tenantB"
+        kern = kernels["axpy" if rng.rand() < 0.5 else "mul"]
+        ins = (bufs[rng.randint(6)], bufs[rng.randint(6)])
+        outs = (bufs[rng.randint(6)],)
+        tasks.append(kern.launch(streams[tag], inputs=ins, outputs=outs))
+    snapshot = lambda: np.stack([np.asarray(b.value) for b in bufs])
+    return snapshot, tasks
+
+
+STREAMS = {"sim": _build_sim, "dyn": _build_dyn, "mixed_tag": _build_mixed_tag}
+
+_REF_CACHE = {}
+
+
+def _ref(stream_name):
+    """Serial-baseline snapshot, computed once per stream family."""
+    if stream_name not in _REF_CACHE:
+        snap, tasks = STREAMS[stream_name]()
+        run_serial(tasks)
+        _REF_CACHE[stream_name] = snap()
+    return _REF_CACHE[stream_name]
+
+
+# ---------------------------------------------------------------------------
+# The matrix
+# ---------------------------------------------------------------------------
+
+class TestSchedulerMatrix:
+    @pytest.mark.parametrize("stream_name", sorted(STREAMS))
+    @pytest.mark.parametrize("policy", SCHEDULER_NAMES)
+    def test_matches_serial(self, policy, stream_name):
+        ref = _ref(stream_name)
+        snap, tasks = STREAMS[stream_name]()
+        run = make_scheduler(policy, window_size=WINDOW)
+        report = run(tasks)
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.exec_stats["tasks_run"] == len(tasks)
+
+
+class TestSessionMatrix:
+    @pytest.mark.parametrize("stream_name", sorted(STREAMS))
+    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    def test_interleaved_feed_matches_serial(self, kind, stream_name):
+        ref = _ref(stream_name)
+        snap, tasks = STREAMS[stream_name]()
+        session = make_session(kind, window_size=WINDOW)
+        rng = np.random.RandomState(7)
+        i = 0
+        while i < len(tasks):
+            k = 1 + rng.randint(6)
+            session.submit(tasks[i: i + k])
+            i += k
+            if rng.rand() < 0.6:
+                session.poll()
+        report = session.close()
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.window_stats["retired"] == len(tasks)
+        assert sum(len(w) for w in report.waves) == len(tasks)
+        if stream_name == "mixed_tag":
+            # tagged tenant accounting must cover every task exactly once
+            assert sum(session.retired_by_tag.values()) == len(tasks)
+            assert set(session.retired_by_tag) == {"tenantA", "tenantB"}
+
+
+# ---------------------------------------------------------------------------
+# Factory validation: unknown names / plan modes fail loudly, naming the
+# valid choices (both registries).
+# ---------------------------------------------------------------------------
+
+class TestFactoryValidation:
+    def test_make_scheduler_unknown_name_lists_choices(self):
+        with pytest.raises(ValueError) as ei:
+            make_scheduler("warp-drive")
+        for name in SCHEDULER_NAMES:
+            assert name in str(ei.value)
+
+    def test_make_session_unknown_name_lists_choices(self):
+        with pytest.raises(ValueError) as ei:
+            make_session("warp-drive")
+        for name in SESSION_NAMES:
+            assert name in str(ei.value)
+
+    def test_make_scheduler_bad_plan_mode_lists_choices(self):
+        with pytest.raises(ValueError) as ei:
+            make_scheduler("device", plan_mode="bogus")
+        for mode in PLAN_MODES:
+            assert mode in str(ei.value)
+
+    def test_make_session_bad_plan_mode_lists_choices(self):
+        with pytest.raises(ValueError) as ei:
+            make_session("device", plan_mode="bogus")
+        for mode in PLAN_MODES:
+            assert mode in str(ei.value)
+
+    def test_device_session_ctor_rejects_bad_plan_mode(self):
+        from repro.core import DeviceSession
+
+        with pytest.raises(ValueError, match="plan_mode"):
+            DeviceSession(plan_mode="bogus")
+
+    def test_device_runner_ctor_rejects_bad_plan_mode(self):
+        from repro.core import DeviceWindowRunner
+
+        with pytest.raises(ValueError, match="plan_mode"):
+            DeviceWindowRunner(plan_mode="bogus")
+
+    @pytest.mark.parametrize("name", SESSION_NAMES)
+    def test_every_registered_session_opens(self, name):
+        session = make_session(name, window_size=4)
+        assert not session.closed
+        session.close()

@@ -261,6 +261,80 @@ class TestLiveTaskStream:
             TaskStream(sink=object())
 
 
+class TestDeviceSessionObservation:
+    """The persistent device window keeps values device-resident between
+    epochs; retirement observers must still see host-fresh values."""
+
+    def _one_task(self):
+        pool = BufferPool()
+        x = pool.alloc((D,), np.float32, value=jnp.ones(D))
+        y = pool.alloc((D,), np.float32, value=jnp.zeros(D))
+        r, w = default_segments((x, x), (y,))
+        task = Task(opcode="axpy", fn=_axpy, inputs=(x, x), outputs=(y,),
+                    read_segments=r, write_segments=w)
+        return y, task
+
+    def test_ticket_holder_observes_fresh_value_at_poll(self):
+        """Regression: a ticketed task is a retirement observer — its
+        output must be synced back before the ticket fires, exactly like
+        callback watchers."""
+        y, task = self._one_task()
+        s = make_session("device", window_size=4)
+        s.submit(task)
+        tk = s.ticket(task)
+        s.poll()
+        assert tk.done()
+        np.testing.assert_allclose(np.asarray(y.value), 1.5 + 1.0 + 1.0)
+        s.close()
+
+    def test_late_observers_also_see_fresh_values(self):
+        """Regression: observers registered AFTER an unwatched epoch
+        retired the task (the fire-immediately paths) must sync first —
+        a late callback or ticket reads the same values an early one
+        would."""
+        y, task = self._one_task()
+        s = make_session("device", window_size=4)
+        s.submit(task)
+        s.poll()  # unwatched epoch: sync deferred
+        seen = []
+        s.on_task_retired(task, lambda t: seen.append(np.asarray(y.value).copy()))
+        assert len(seen) == 1
+        np.testing.assert_allclose(seen[0], 1.5 + 1.0 + 1.0)
+        tk = s.ticket(task)
+        assert tk.done()
+        np.testing.assert_allclose(np.asarray(y.value), 1.5 + 1.0 + 1.0)
+        s.close()
+
+    def test_unwatched_values_require_sync(self):
+        """Documented contract: without an observer, an epoch defers the
+        host sync; ``sync()`` (or flush/close) makes direct reads safe."""
+        y, task = self._one_task()
+        s = make_session("device", window_size=4)
+        s.submit(task)
+        s.poll()
+        assert s.session_stats()["host_syncs"] == 0  # deferred
+        s.sync()
+        assert s.session_stats()["host_syncs"] == 1
+        np.testing.assert_allclose(np.asarray(y.value), 1.5 + 1.0 + 1.0)
+        s.close()
+
+    def test_runner_session_shares_registry(self):
+        """DeviceWindowRunner.session() mirrors the other schedulers'
+        session() handles: same opcode registry, fresh per-session arena,
+        serial-equivalent results."""
+        from repro.core import DeviceWindowRunner
+
+        ref = serial_ref(4)
+        _, buffers, tasks = build_stream(4, 30, 6)
+        runner = DeviceWindowRunner(window_size=8, plan_mode="frontier")
+        s = runner.session()
+        assert s.registry is runner.registry
+        assert s.plan_mode == "frontier"
+        report = feed_interleaved(s, tasks, 4)
+        np.testing.assert_allclose(final_values(buffers), ref, rtol=1e-6)
+        assert report.window_stats["retired"] == 30
+
+
 class TestBufferPoolFree:
     def test_free_releases_name_without_recycling_addresses(self):
         pool = BufferPool()

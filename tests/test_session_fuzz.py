@@ -1,0 +1,181 @@
+"""Stateful session fuzz: random interleavings of ``submit`` / ``poll`` /
+``drive`` / ``flush`` / ``close`` against every session kind must
+
+* preserve serial-order results (final buffer contents == ``run_serial``
+  over exactly the submitted prefix, in submission order);
+* never deadlock (``flush``/``close`` terminate — the per-test timeout is
+  the tripwire when `pytest-timeout` is installed);
+* keep ``drained()`` / ``idle()`` / ``backlog`` consistent with the window
+  invariants at every step: an open session is never ``drained()``, a
+  flushed session is idle with zero outstanding, a closed session is
+  drained and refuses further input.
+
+Runs through the ``tests/_prophelper.py`` shim: real hypothesis when
+installed, the seeded-random driver otherwise — either way the action
+scripts are deterministic per test name.
+"""
+
+import numpy as np
+import pytest
+from _prophelper import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import BufferPool, SESSION_NAMES, Task, make_session, run_serial
+from repro.core.task import default_segments
+
+D = 4
+N_TASKS = 24
+N_BUFFERS = 5
+
+SUBMIT, POLL, DRIVE, FLUSH, CLOSE = range(5)
+# Submission-biased action mix; CLOSE appears once per script at most
+# (subsequent CLOSE draws assert the double-close error path).
+ACTION_WEIGHTS = (SUBMIT, SUBMIT, SUBMIT, POLL, DRIVE, FLUSH, CLOSE)
+
+
+def _axpy(x, y):
+    return 1.5 * x + y + 1.0
+
+
+def _mul(x, y):
+    return x * y - 0.5
+
+
+OPS = {"axpy": _axpy, "mul": _mul}
+
+
+def build_stream(seed):
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    bufs = [
+        pool.alloc((D,), np.float32,
+                   value=jnp.asarray(rng.randn(D).astype(np.float32)))
+        for _ in range(N_BUFFERS)
+    ]
+    tasks = []
+    names = list(OPS)
+    for _ in range(N_TASKS):
+        op = names[rng.randint(len(names))]
+        ins = (bufs[rng.randint(N_BUFFERS)], bufs[rng.randint(N_BUFFERS)])
+        outs = (bufs[rng.randint(N_BUFFERS)],)
+        r, w = default_segments(ins, outs)
+        tasks.append(Task(opcode=op, fn=OPS[op], inputs=ins, outputs=outs,
+                          read_segments=r, write_segments=w))
+    return bufs, tasks
+
+
+def _final(bufs):
+    return np.stack([np.asarray(b.value) for b in bufs])
+
+
+def _check_open_invariants(session):
+    """Window invariants that must hold at EVERY step while input is open.
+    Taken under the session lock so threaded workers can't race the
+    reads."""
+    with session._lock:
+        assert not session.window.drained()  # open input => never drained
+        backlog = session.window.backlog()
+        assert backlog == session.backlog()
+        assert session.window.idle() == (backlog == 0)
+        # submitted - retired must equal FIFO + resident: retirement and
+        # window removal are one atomic step in every session kind
+        assert session.outstanding == backlog
+
+
+def _run_script(kind, seed, script):
+    bufs, tasks = build_stream(seed)
+    session = make_session(kind, window_size=4)
+    cursor = 0
+    report = None
+    for code, arg in script:
+        action = ACTION_WEIGHTS[code]
+        if session.closed:
+            if action is SUBMIT and cursor < len(tasks):
+                with pytest.raises(RuntimeError):
+                    session.submit(tasks[cursor])
+            elif action is CLOSE:
+                with pytest.raises(RuntimeError):
+                    session.close()
+            # poll/drive/flush after close are harmless no-ops
+            elif action is POLL:
+                session.poll()  # may drain retirees from the closing flush
+                assert session.poll() == []  # ...but only once
+            elif action is FLUSH:
+                session.flush()
+            continue
+        if action is SUBMIT:
+            chunk = tasks[cursor: cursor + arg]
+            if not chunk:
+                continue
+            depth = session.submit(chunk)
+            cursor += len(chunk)
+            assert depth >= 1  # the just-submitted work is outstanding
+        elif action is POLL:
+            session.poll()
+        elif action is DRIVE:
+            session.drive()
+        elif action is FLUSH:
+            session.flush()
+            with session._lock:
+                assert session.outstanding == 0
+                assert session.window.idle()
+        else:  # CLOSE
+            report = session.close()
+        if not session.closed:
+            _check_open_invariants(session)
+
+    if not session.closed:
+        report = session.close()
+    # closed and complete: drained, nothing outstanding, loud re-close
+    assert session.window.drained()
+    assert session.outstanding == 0
+    with pytest.raises(RuntimeError):
+        session.close()
+    assert report.window_stats["retired"] == cursor
+    assert sum(len(w) for w in report.waves) == cursor
+
+    # serial-order equivalence over exactly the submitted prefix
+    ref_bufs, ref_tasks = build_stream(seed)
+    run_serial(ref_tasks[:cursor])
+    np.testing.assert_array_equal(_final(bufs), _final(ref_bufs))
+
+
+class TestSessionFuzz:
+    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    def test_random_interleavings(self, kind):
+        # parametrize composes with the property via an inner closure: the
+        # _prophelper shim (and hypothesis) fill ONLY the drawn arguments,
+        # so the pytest param never collides with a strategy slot.
+        @given(st.integers(0, 10_000),
+               st.lists(st.tuples(st.integers(0, len(ACTION_WEIGHTS) - 1),
+                                  st.integers(1, 5)),
+                        min_size=1, max_size=30))
+        @settings(max_examples=8, deadline=None)
+        def prop(seed, script):
+            _run_script(kind, seed, script)
+
+        prop()
+
+    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    def test_callbacks_fire_once_under_interleaving(self, kind):
+        """Retirement observation stays exact under chunked feeding: every
+        submitted task's callback fires exactly once, and per-tag counts
+        cover the stream."""
+        bufs, tasks = build_stream(3)
+        for t in tasks:
+            t.stream_tag = "fuzz"
+        session = make_session(kind, window_size=4)
+        seen = []
+        i = 0
+        rng = np.random.RandomState(11)
+        while i < len(tasks):
+            k = 1 + rng.randint(4)
+            session.submit(tasks[i: i + k],
+                           on_retire=lambda t: seen.append(t.tid))
+            i += k
+            if rng.rand() < 0.5:
+                session.poll()
+        session.close()
+        assert sorted(seen) == sorted(t.tid for t in tasks)
+        assert session.retired_by_tag == {"fuzz": len(tasks)}

@@ -20,6 +20,7 @@ def test_engine_steps_and_stays_finite(env):
     assert np.all(np.isfinite(snap))
 
 
+@pytest.mark.slow  # multi-step 8-env run (~20s): stress lane
 def test_acs_matches_serial_execution():
     """ACS scheduling of the physics stream is bit-compatible with serial."""
     def run(scheduler_fn):
@@ -35,6 +36,7 @@ def test_acs_matches_serial_execution():
     np.testing.assert_allclose(got, ref, rtol=2e-5, atol=1e-6)
 
 
+@pytest.mark.slow  # 6 full grasp steps (~35s, the suite's slowest): stress lane
 def test_input_dependence_of_contact_kernels():
     """The active-contact set (and so the task stream) varies with state —
     the paper's defining property of these workloads."""

@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from repro.core import BufferPool, Task, ThreadedStreamScheduler, run_serial
 from repro.core.task import default_segments
 
+pytestmark = pytest.mark.slow  # stress lane: excluded from tier-1
+
 D = 4
 
 
