@@ -179,9 +179,14 @@ def main() -> None:
 
     for name, (server, is_session) in servers.items():
         if is_session:
-            max_resident = server.session.window.stats.max_resident
+            wstats = server.session.window_stats()
+            max_resident = wstats["max_resident"]
             emit("serving", f"{name}_mean_resident",
                  round(float(np.mean(server.occupancy_samples or [0])), 2))
+            # dependency-engine accounting: interval cells probed vs the
+            # pairwise checks Algorithm 1 would have burned per admit
+            emit("serving", f"{name}_probes_per_insert",
+                 round(wstats["scoreboard_probes"] / max(wstats["inserted"], 1), 2))
         else:
             max_resident = max([e.get("window_max_resident", 0)
                                 for e in server.report_log] or [0])

@@ -52,9 +52,11 @@ SECTIONS = {
 }
 
 # The sections --smoke runs when none are named: the ones exercising plan
-# lowering, the unified scheduler API, and the live-session serving path
-# (regressions there should fail in CI, not at bench time).
-SMOKE_SECTIONS = ("device", "frontier", "serving")
+# lowering, the unified scheduler API, the live-session serving path, and
+# the scoreboard dependency engine (depcheck's probe-vs-scan counters and
+# window_size's window=256 leg over the real sim/dyn streams) — so
+# regressions there fail in CI, not at bench time.
+SMOKE_SECTIONS = ("depcheck", "device", "frontier", "serving", "window_size")
 
 
 def main() -> None:

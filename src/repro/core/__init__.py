@@ -35,6 +35,7 @@ from .scheduler import (
     run_serial,
 )
 from .session import SchedulerSession, TaskTicket, ThreadedSession, WaveSession
+from .scoreboard import IntervalScoreboard
 from .segments import Segment, SegmentSet, any_overlap, depends_on, segments_overlap
 from .task import Task, operand_base, operand_dtype, operand_shape
 from .window import SchedulingWindow, TaskState
@@ -83,6 +84,7 @@ __all__ = [
     "make_scheduler",
     "make_session",
     "run_serial",
+    "IntervalScoreboard",
     "Segment",
     "SegmentSet",
     "any_overlap",

@@ -169,10 +169,16 @@ def plan_waves(tasks: Sequence[Task], window_size: int = 32,
                return_window: bool = False):
     """Run the windowed scheduler symbolically to obtain the wave plan.
 
+    Planning cost rides the window's interval scoreboard: each insertion
+    probes only its own segments' intervals, so planning at window
+    128-512 costs barely more per task than at 32 (the seed's pairwise
+    scan made large planning windows quadratic-feeling — see
+    ``benchmarks/bench_window_size.py``).
+
     With ``return_window=True`` also returns the planning
-    :class:`SchedulingWindow`, whose stats (dep checks, occupancy) are the
-    real numbers behind the plan — the runner reports them instead of a
-    fresh all-zero window.
+    :class:`SchedulingWindow`, whose stats (dep checks, scoreboard
+    probes, occupancy) are the real numbers behind the plan — the runner
+    reports them instead of a fresh all-zero window.
     """
     window = SchedulingWindow(window_size)
     window.submit_all(tasks)
@@ -857,7 +863,11 @@ class DeviceSession(SchedulerSession):
         """Drain the live window symbolically into this epoch's plan:
         wave fronts or one homogeneous frontier group per step. The window
         retires (and refills from the FIFO) during planning — execution
-        follows, then retirement callbacks fire."""
+        follows, then retirement callbacks fire. The replanning is cheap
+        by construction: upstream sets were resolved incrementally by the
+        scoreboard at submit time, and each retire-and-refill here costs
+        O(own segments + out-degree), not a window rescan — so epoch
+        planning at window 256 does not melt the admission path."""
         plan: List[List[Task]] = []
         while not self.window.idle():
             ready = self.window.ready_tasks()
@@ -1081,6 +1091,9 @@ class DeviceSession(SchedulerSession):
                 "host_syncs": self.host_syncs,
                 "n_classes": self.arena.n_classes(),
                 "padding_waste_frac": round(self.arena.total_waste_frac(), 4),
+                # dependency-engine accounting (probe vs pairwise-equiv)
+                "dep_checks": self.window.stats.dep_checks,
+                "scoreboard_probes": self.window.stats.scoreboard_probes,
             }
 
     def _finalize(self) -> SchedulerReport:

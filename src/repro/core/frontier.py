@@ -174,6 +174,11 @@ class FrontierSession(SchedulerSession):
             self._note_retired(t)
 
     def _pump(self) -> bool:
+        # Per-pump window costs are all incremental: retire_many updates
+        # scoreboard claims + downstream sets in O(own segments +
+        # out-degree), refill dep-checks via scoreboard probes, and
+        # ready_tasks() is a plain ordered read — no per-poll sort, no
+        # pairwise rescan — so polling stays cheap at window 256+.
         ex = self.executor
         progressed = False
 

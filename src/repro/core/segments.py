@@ -15,8 +15,16 @@ Two implementations are provided:
 * ``segments_overlap`` / ``any_overlap`` — scalar reference, used by the
   property tests as the oracle.
 * ``SegmentSet`` — a small-array numpy representation enabling vectorized
-  window-wide checks (the paper budgets ~0.4–1.6 us per check, Table II;
-  the vectorized path is what keeps us inside that envelope for window=32).
+  window-wide checks (the paper budgets ~0.4–1.6 us per check, Table II).
+
+The vectorized whole-window scan (``window_upstreams`` / ``StackedWindow``)
+was the production window's per-insertion check through PR 4; it is O(window
+x segments^2) per insertion, which caps usable window sizes around the
+paper's N=32. The live dependency authority is now the incremental
+``core.scoreboard.IntervalScoreboard`` (O(segments x log intervals) per
+insertion); the pairwise scan survives here as the *property-test oracle*
+the scoreboard is asserted bit-identical against (``tests/test_scoreboard.py``)
+and as the baseline leg of ``benchmarks/bench_depcheck.py``.
 """
 
 from __future__ import annotations
@@ -34,6 +42,7 @@ __all__ = [
     "depends_on",
     "window_upstreams",
     "StackedWindow",
+    "pairwise_window_replay",
 ]
 
 
@@ -90,7 +99,7 @@ class SegmentSet:
     (W_new x RW_old, R_new x W_old covered by RW_new x W_old + W_new x R_old).
     """
 
-    __slots__ = ("starts", "ends")
+    __slots__ = ("starts", "ends", "_coalesced")
 
     def __init__(self, segments: Sequence[Segment] | None = None):
         if segments:
@@ -99,6 +108,7 @@ class SegmentSet:
         else:
             self.starts = np.empty((0,), dtype=np.int64)
             self.ends = np.empty((0,), dtype=np.int64)
+        self._coalesced: "SegmentSet | None" = None
 
     @classmethod
     def from_arrays(cls, starts: np.ndarray, ends: np.ndarray) -> "SegmentSet":
@@ -120,6 +130,46 @@ class SegmentSet:
             np.concatenate([self.ends, other.ends]),
         )
 
+    def coalesced(self) -> "SegmentSet":
+        """Canonical form: sorted, empty segments dropped, adjacent or
+        overlapping intervals merged. The covered address set — and hence
+        every hazard verdict — is unchanged, but a task touching many
+        contiguous row views of one buffer registers ONE scoreboard claim
+        instead of one per row, cutting probe counts and boundary churn.
+        Cached (segment sets are de facto immutable once built); returns
+        ``self`` when already canonical."""
+        if self._coalesced is not None:
+            return self._coalesced
+        n = len(self)
+        if n == 0:
+            self._coalesced = self
+            return self
+        starts, ends = self.starts, self.ends
+        if bool(np.all(starts < ends)) and (
+            n == 1 or bool(np.all(starts[1:] > ends[:-1]))
+        ):
+            self._coalesced = self  # already sorted, non-empty, disjoint
+            return self
+        keep = starts < ends
+        ss, ee = starts[keep], ends[keep]
+        order = np.argsort(ss, kind="stable")
+        ss, ee = ss[order], ee[order]
+        out_s: list = []
+        out_e: list = []
+        for s, e in zip(ss, ee):
+            if out_e and s <= out_e[-1]:
+                if e > out_e[-1]:
+                    out_e[-1] = e
+            else:
+                out_s.append(s)
+                out_e.append(e)
+        merged = SegmentSet.from_arrays(
+            np.asarray(out_s, dtype=np.int64), np.asarray(out_e, dtype=np.int64)
+        )
+        merged._coalesced = merged
+        self._coalesced = merged
+        return merged
+
     def intersects(self, other: "SegmentSet") -> bool:
         """Vectorized all-pairs interval overlap (broadcasted Algorithm 1)."""
         if len(self) == 0 or len(other) == 0:
@@ -138,9 +188,15 @@ class SegmentSet:
 
 class StackedWindow:
     """Pre-stacked (starts, ends, owner) arrays for a window's resident
-    read and write segments — the steady-state representation a production
-    window maintains incrementally so the per-insertion check is a single
-    broadcasted interval pass (Table II fast path)."""
+    read and write segments: one broadcasted interval pass checks an
+    incoming kernel against the whole window (Table II fast path).
+
+    Demoted from the production dependency path to the *pairwise oracle*:
+    the live window now maintains an incremental interval scoreboard
+    (``core.scoreboard``), and this all-pairs form is what the scoreboard's
+    upstream sets are property-tested against — plus the baseline leg of
+    ``benchmarks/bench_depcheck.py`` showing where the O(window) scan
+    stopped scaling."""
 
     __slots__ = ("n", "rs", "re", "own_r", "ws", "we", "own_w")
 
@@ -194,10 +250,56 @@ def window_upstreams(
     resident_reads: Sequence[SegmentSet],
     resident_writes: Sequence[SegmentSet],
 ) -> np.ndarray:
-    """Vectorized whole-window check (stack + one broadcasted pass)."""
+    """Vectorized whole-window check (stack + one broadcasted pass).
+
+    The seed window called this per insertion; it is now the oracle the
+    scoreboard path is asserted bit-identical against."""
     return StackedWindow(resident_reads, resident_writes).check(
         reads_new, writes_new
     )
+
+
+def pairwise_window_replay(tasks, window_size: int):
+    """Oracle replay of the seed scheduling window: fill each vacancy by
+    dep-checking the incoming task against ALL residents via the
+    whole-window scan, then drain in waves of dependency-free residents.
+
+    Returns the wave schedule as lists of tids. This is the single shared
+    copy of the demoted pairwise dependency logic: the scoreboard property
+    tests assert the production window's schedule equals this replay
+    bit-for-bit, and ``benchmarks/bench_window_size.py`` times it to show
+    where the O(window x segments^2) path stopped scaling. ``tasks`` need
+    only ``tid``/``read_segments``/``write_segments``.
+    """
+    import collections
+
+    fifo = collections.deque(tasks)
+    resident: "collections.OrderedDict[int, tuple]" = collections.OrderedDict()
+
+    def fill():
+        while fifo and len(resident) < window_size:
+            t = fifo.popleft()
+            tids = list(resident)
+            mask = window_upstreams(
+                t.read_segments, t.write_segments,
+                [resident[x][0].read_segments for x in tids],
+                [resident[x][0].write_segments for x in tids],
+            )
+            resident[t.tid] = (t, {x for x, hit in zip(tids, mask) if hit})
+
+    fill()
+    waves = []
+    while resident:
+        ready = [x for x, (_, up) in resident.items() if not up]
+        if not ready:
+            raise RuntimeError("pairwise replay stalled")
+        waves.append(ready)
+        for x in ready:
+            del resident[x]
+        for _, up in resident.values():
+            up.difference_update(ready)
+        fill()
+    return waves
 
 
 def depends_on(

@@ -29,6 +29,13 @@ each task retires, and ``ticket()`` hands out a future-like
 scheduler are now thin open-submit-close wrappers over these sessions, so
 all batch callers and the serial-equivalence property are unchanged.
 
+Dependency checking inside every session kind is the window's interval
+scoreboard (``core/scoreboard.py``): a live ``submit()`` costs
+O(segments x log intervals) regardless of window size, so sessions can
+run windows of 128-512 without the insertion scan eating the concurrency
+it exposes; ``window_stats()`` surfaces the probe-vs-pairwise counters
+live.
+
 Thread-safety: all bookkeeping runs under one re-entrant lock, so
 retirement callbacks may submit follow-on work into the same session (the
 serving runtime's decode chain does exactly this). ``ThreadedSession``
@@ -128,6 +135,14 @@ class SchedulerSession:
         """Tasks submitted but not yet retired (FIFO + resident)."""
         with self._lock:
             return self.window.backlog()
+
+    def window_stats(self) -> Dict[str, int]:
+        """Live snapshot of the window's counters (dep_checks =
+        pairwise-equivalent Algorithm 1 cost, scoreboard_probes = interval
+        cells actually inspected, inserted/retired/max_resident) — the
+        monitoring surface servers poll without draining the session."""
+        with self._lock:
+            return self.window.stats.as_dict()
 
     @property
     def closed(self) -> bool:

@@ -5,9 +5,9 @@ Faithful mechanics:
 * kernels arrive through an **input FIFO** in program order;
 * a fixed-size **window** (default N=32, the paper's chosen size) holds the
   kernels currently being tracked;
-* on insertion, the incoming kernel is dependency-checked against every
-  kernel already resident (Algorithm 1 over read/write segments) and the
-  overlapping residents form its **upstream list**;
+* on insertion, the incoming kernel is dependency-checked against the
+  residents (RAW/WAR/WAW over read/write segments, Algorithm 1's hazard
+  semantics) and the conflicting residents form its **upstream list**;
 * a kernel whose upstream list is empty is **READY**; launched kernels are
   EXECUTING; on completion the kernel is retired, removed from every
   upstream list, and vacancies are refilled from the FIFO.
@@ -24,7 +24,18 @@ Note on Algorithm 1 as printed: it tests the incoming kernel's *writes*
 against residents' reads+writes (WAR + WAW) only. Correctness also needs
 RAW (incoming *reads* vs residents' writes) — §III-C's prose ("overlaps
 between read segments and write segments") implies it; we implement the
-full RAW/WAR/WAW check (`segments.depends_on`).
+full RAW/WAR/WAW check.
+
+**Dependency authority** (DESIGN.md §9): the sole source of upstream sets
+is the incremental :class:`~.scoreboard.IntervalScoreboard` — per
+address-interval writer/reader tid sets in a sorted boundary structure,
+probed only at the incoming kernel's own (coalesced) segments. An
+insertion costs O(segments x log intervals) instead of the seed's
+O(window x segments^2) pairwise scan (``segments.window_upstreams``, now
+demoted to the property-test oracle), which is what makes windows of
+128-512 affordable. ``WindowStats`` counts both the scoreboard cells
+actually probed and the pairwise-equivalent check count the seed path
+would have performed, so Table II comparisons stay honest.
 
 Because insertion order == program order, dependencies only ever point
 from newer to older kernels; the window can never deadlock, and a window
@@ -34,19 +45,21 @@ Ready-set maintenance is **incremental** (DESIGN.md §9): each slot keeps
 its upstream tid set AND the window keeps the reverse adjacency
 (tid -> dependent tids), so a retire touches only the retiree's true
 downstreams — O(out-degree) — instead of rescanning every resident slot.
-The READY set is an index keyed by insertion sequence number; since a
-woken dependent can carry an older seq than a task inserted READY after
-it, `ready_tasks()` sorts the (small) index — O(R log R) — to report
-oldest-first program order.
+The READY index is a sorted list of (insertion seq, tid): fresh inserts
+append (their seq is the global max) and a woken dependent — whose seq
+may be older than a task inserted READY after it — bisects in, so
+``ready_tasks()`` reports oldest-first program order without re-sorting
+on every poll.
 """
 
 from __future__ import annotations
 
+import bisect
 import collections
 import enum
-from typing import Deque, Dict, Iterable, List, Optional, Sequence, Set
+from typing import Deque, Dict, Iterable, List, Sequence, Set, Tuple
 
-from .segments import depends_on, window_upstreams
+from .scoreboard import IntervalScoreboard
 from .task import Task
 
 __all__ = ["TaskState", "SchedulingWindow", "WindowStats"]
@@ -69,10 +82,18 @@ class _Slot:
 
 
 class WindowStats:
-    """Counters for the benchmarks (dep checks mirror Table II)."""
+    """Counters for the benchmarks (dep checks mirror Table II).
+
+    ``dep_checks`` is the *pairwise-equivalent* count: how many
+    incoming-vs-resident checks Algorithm 1's scan would have performed
+    (residents at each insertion) — kept so Table II comparisons against
+    the paper stay honest. ``scoreboard_probes`` is what the incremental
+    path actually did: interval cells inspected across all insertions.
+    The ratio probes/checks is the concurrency-discovery saving."""
 
     def __init__(self) -> None:
         self.dep_checks = 0
+        self.scoreboard_probes = 0
         self.inserted = 0
         self.retired = 0
         self.max_resident = 0
@@ -80,6 +101,7 @@ class WindowStats:
     def as_dict(self) -> Dict[str, int]:
         return {
             "dep_checks": self.dep_checks,
+            "scoreboard_probes": self.scoreboard_probes,
             "inserted": self.inserted,
             "retired": self.retired,
             "max_resident": self.max_resident,
@@ -94,6 +116,10 @@ class SchedulingWindow:
         self.fifo: Deque[Task] = collections.deque()
         self.slots: "collections.OrderedDict[int, _Slot]" = collections.OrderedDict()
         self.stats = WindowStats()
+        # The dependency authority: interval claims of every resident.
+        # Residency here and on the scoreboard are updated in lockstep
+        # (insert at _fill, remove at retire).
+        self.scoreboard = IntervalScoreboard()
         self._seq = 0
         # Live-session input state: False = closed batch (default; the
         # producer has submitted everything it ever will), True = a
@@ -103,11 +129,11 @@ class SchedulingWindow:
         # dependents. Maintained at insertion; consumed at retire so the
         # upstream update is O(out-degree), not O(window).
         self._downstream: Dict[int, Set[int]] = {}
-        # READY slots keyed by insertion seq -> tid. NOT oldest-first by
-        # dict order: a retire can wake a PENDING dependent whose seq is
-        # older than a task inserted READY after it, so ready_tasks()
-        # sorts by seq to report program order.
-        self._ready: Dict[int, int] = {}
+        # READY slots as a sorted list of (seq, tid): kept ordered
+        # incrementally (fresh inserts carry the max seq and append; a
+        # woken dependent bisects into place), so ready_tasks() is a
+        # plain O(R) read in program order — no per-poll sort.
+        self._ready: List[Tuple[int, int]] = []
 
     # -- producer side ----------------------------------------------------
     def submit(self, task: Task) -> None:
@@ -145,18 +171,15 @@ class SchedulingWindow:
     # -- scheduler side ---------------------------------------------------
     def ready_tasks(self) -> List[Task]:
         """All READY kernels, oldest-first (they may launch concurrently)."""
-        if len(self._ready) > 1:
-            seqs = sorted(self._ready)
-        else:
-            seqs = list(self._ready)
-        return [self.slots[self._ready[s]].task for s in seqs]
+        return [self.slots[tid].task for _, tid in self._ready]
 
     def mark_executing(self, task: Task) -> None:
         slot = self.slots[task.tid]
         if slot.state is not TaskState.READY:
             raise RuntimeError(f"task {task.tid} launched while {slot.state}")
         slot.state = TaskState.EXECUTING
-        del self._ready[slot.seq]
+        idx = bisect.bisect_left(self._ready, (slot.seq, task.tid))
+        del self._ready[idx]
 
     def retire(self, task: Task) -> None:
         """Kernel completed: drop it, update upstream lists, refill window."""
@@ -190,27 +213,27 @@ class SchedulingWindow:
         if slot.state is not TaskState.EXECUTING:
             raise RuntimeError(f"task {task.tid} retired while {slot.state}")
         del self.slots[task.tid]
+        self.scoreboard.retire(task.tid)
         for dep_tid in self._downstream.pop(task.tid, ()):
             dep = self.slots[dep_tid]
             dep.upstream.discard(task.tid)
             if not dep.upstream and dep.state is TaskState.PENDING:
                 dep.state = TaskState.READY
-                self._ready[dep.seq] = dep_tid
+                bisect.insort(self._ready, (dep.seq, dep_tid))
         self.stats.retired += 1
 
     def _fill(self) -> None:
         while self.fifo and len(self.slots) < self.size:
             task = self.fifo.popleft()
-            tids = list(self.slots.keys())
-            self.stats.dep_checks += len(tids)
-            # one vectorized interval pass over the whole window (Table II)
-            mask = window_upstreams(
-                task.read_segments,
-                task.write_segments,
-                [self.slots[t].task.read_segments for t in tids],
-                [self.slots[t].task.write_segments for t in tids],
+            # Pairwise-equivalent accounting: Algorithm 1 would have
+            # checked the incoming kernel against every resident.
+            self.stats.dep_checks += len(self.slots)
+            # The actual check: probe only the intervals this kernel's
+            # own segments touch (exact RAW/WAR/WAW upstream set).
+            upstream = self.scoreboard.insert(
+                task.tid, task.read_segments, task.write_segments
             )
-            upstream = {tid for tid, hit in zip(tids, mask) if hit}
+            self.stats.scoreboard_probes = self.scoreboard.probe_cells
             for up_tid in upstream:
                 self._downstream.setdefault(up_tid, set()).add(task.tid)
             state = TaskState.PENDING if upstream else TaskState.READY
@@ -218,6 +241,7 @@ class SchedulingWindow:
             self._seq += 1
             self.slots[task.tid] = slot
             if state is TaskState.READY:
-                self._ready[slot.seq] = task.tid
+                # fresh insert: seq is the global max, so append keeps order
+                self._ready.append((slot.seq, task.tid))
             self.stats.inserted += 1
             self.stats.max_resident = max(self.stats.max_resident, len(self.slots))

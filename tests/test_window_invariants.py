@@ -207,3 +207,47 @@ class TestRetireMany:
         w.retire(t1)
         # t2 woke up; ordering must remain program order (t2 before t3)
         assert [t.tid for t in w.ready_tasks()] == [t2.tid, t3.tid]
+
+
+class TestReadyOrdering:
+    """The READY index is kept ordered *incrementally* (sorted insert on
+    wake, append on fresh insert) — ready_tasks() must report oldest-first
+    program order at every step without a per-poll sort."""
+
+    @given(st.integers(0, 10_000), st.integers(1, 9))
+    @settings(max_examples=25, deadline=None)
+    def test_property_ready_always_program_order(self, seed, size):
+        import random as pyrandom
+
+        tasks = random_stream(seed, 30, 4)
+        pos = {t.tid: i for i, t in enumerate(tasks)}
+        w = SchedulingWindow(size=size)
+        w.submit_all(tasks)
+        rng = pyrandom.Random(seed)
+        while not w.drained():
+            ready = w.ready_tasks()
+            assert ready, "stall"
+            positions = [pos[t.tid] for t in ready]
+            assert positions == sorted(positions), "ready not oldest-first"
+            # the incremental index itself must already be sorted (no
+            # lazy re-sort hiding inside ready_tasks)
+            assert w._ready == sorted(w._ready)
+            # retire a RANDOM ready task so wakes land mid-index: a woken
+            # dependent can be older than a later-inserted READY task
+            t = ready[rng.randrange(len(ready))]
+            w.mark_executing(t)
+            w.retire(t)
+
+    def test_wake_bisects_into_place_between_ready_peers(self):
+        pool = BufferPool()
+        a, b, c, d, e, f, g = bufs(pool, 7)
+        w = SchedulingWindow(size=8)
+        t1 = make_task(pool, [a], [b])
+        t2 = make_task(pool, [b], [c])  # waits on t1
+        t3 = make_task(pool, [d], [e])  # independent, READY at insert
+        t4 = make_task(pool, [f], [g])  # independent, READY at insert
+        w.submit_all([t1, t2, t3, t4])
+        w.mark_executing(t3)  # launch the middle READY task first
+        w.mark_executing(t1)
+        w.retire(t1)  # wakes t2, whose seq is between none-left and t4
+        assert [t.tid for t in w.ready_tasks()] == [t2.tid, t4.tid]
