@@ -1,0 +1,300 @@
+"""Unbounded-lifetime soak: hours-equivalent traffic through one live
+``SessionServer(scheduler="device")`` session.
+
+The fixed bug class (DESIGN.md §2 A3 gap (2)): before row recycling the
+device arena leaked one slab row per buffer it ever saw, the plan cache
+grew one entry per leaked address pattern, and server bookkeeping
+(``task_kinds``, ``report_log``, ``occupancy_samples``) grew without
+bound — a serving process was a slow memory bomb. This section soaks ONE
+server with Poisson request traffic plus per-request auxiliary
+device-lowerable chains (serving kernels themselves take the host path —
+slot values are opaque cache pytrees — so the aux chains are what
+exercises arena residency), frees every aux buffer through the pool
+free-hook, and shifts the aux shape class mid-soak so a whole class goes
+dead and a compaction epoch must fire.
+
+Gates (emitted as 0/1 metrics; the smoke leg runs in CI):
+
+* ``slab_flat``            — slab bytes at the last checkpoint of each
+                             shape-class regime equal the first steady
+                             checkpoint of that regime (no per-phase growth);
+* ``plan_cache_bounded``   — cache entries stay under a small constant
+                             across every checkpoint (not one per phase);
+* ``rows_recycled``        — recurring traffic actually reuses freed rows
+                             (the free-list path, not just compaction);
+* ``compacted``            — at least one compaction epoch fired and
+                             invalidated only its own structure keys;
+* ``matches_serial``       — the aux program re-run through the device
+                             session is bit-identical to ``run_serial``
+                             across the compaction epoch;
+* ``rss_bounded``          — resident set growth after warmup stays under
+                             a generous margin (catches the leak's order
+                             of magnitude, not allocator noise);
+* ``p95_stable``           — last-phase request p95 within a loose factor
+                             of the first phase (no progressive slowdown);
+* ``bookkeeping_bounded``  — ``task_kinds`` drains, ``report_log`` and
+                             ``occupancy_samples`` respect history_limit.
+
+The counterfactual leg re-runs the same chain traffic into a session
+WITHOUT freeing — the pre-fix behavior — and reports its monotone slab
+growth for contrast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import init_params
+
+from .common import emit, smoke
+
+RSS_MARGIN_MB = 192.0  # generous: allocator + jit-cache noise, not leaks
+P95_FACTOR = 5.0       # loose: shared-host jitter, not progressive slowdown
+PLAN_CACHE_CAP = 8     # entries; pre-fix grows ~one per phase
+
+
+def _soak_cfg():
+    # soak measures lifetime invariants, not kernel throughput: the model
+    # only needs to be big enough to produce real prefill/decode chains
+    return dataclasses.replace(
+        ARCHS["h2o-danube-3-4b"].reduced(),
+        n_layers=1, d_model=32, d_ff=64, vocab=64,
+        n_heads=2, n_kv_heads=1, head_dim=16,
+    )
+
+
+def _rss_mb() -> float:
+    with open("/proc/self/statm") as fh:
+        resident_pages = int(fh.read().split()[1])
+    return resident_pages * os.sysconf("SC_PAGE_SIZE") / 1e6
+
+
+def _axpy(x, y):
+    return x + 2.0 * y
+
+
+def _aux_shape(phase: int, n_phases: int):
+    # rank-distinct shapes => distinct arena classes (a (16,) vs (8,) pair
+    # would pad into the SAME class); the mid-soak switch strands the old
+    # class entirely free, forcing a compaction epoch
+    return (8,) if phase < n_phases // 2 else (2, 8)
+
+
+def _aux_chains(session, pool, phase: int, n_phases: int, k: int, tag: str):
+    """k request-shaped chains (3 fresh buffers, 2 dependent tasks each)
+    submitted into the live session; returns the buffer names so the
+    caller can free them through the pool (free-hook -> arena row)."""
+    from repro.core import Task
+    from repro.core.task import default_segments
+
+    shape = _aux_shape(phase, n_phases)
+    names = []
+    for i in range(k):
+        import jax.numpy as jnp
+
+        bufs = [pool.alloc(shape, np.float32,
+                           name=f"{tag}_p{phase}_c{i}_b{j}",
+                           value=jnp.full(shape, float(phase * 100 + i + j)))
+                for j in range(3)]
+        names.extend(b.name for b in bufs)
+        for src, dst in ((0, 2), (2, 0)):
+            r, w = default_segments((bufs[src], bufs[1]), (bufs[dst],))
+            session.submit(Task(opcode="soak_axpy", fn=_axpy,
+                                inputs=(bufs[src], bufs[1]),
+                                outputs=(bufs[dst],),
+                                read_segments=r, write_segments=w))
+    return names
+
+
+def _drive_phase(server, prompts, arrivals, max_new):
+    """Open-loop: inject each request at its scheduled arrival, pump the
+    live session in between."""
+    t0 = time.perf_counter()
+    nxt, done = 0, []
+    while len(done) < len(prompts):
+        now = time.perf_counter() - t0
+        while nxt < len(prompts) and arrivals[nxt] <= now:
+            req = server.submit(prompts[nxt], max_new=max_new)
+            req.t_arrival = t0 + arrivals[nxt]
+            nxt += 1
+        finished = server.pump()
+        done.extend(finished)
+        if not finished and (server.active or server.queue):
+            server.session.drive()
+    return done
+
+
+def _identity_program(session, pool):
+    """The differential leg's program: class-A traffic, release most of it
+    (stranding rows), then class-B traffic — spans a compaction epoch on
+    the device session. Returns the final buffer values, host-ordered."""
+    import jax.numpy as jnp
+
+    from repro.core import Task
+    from repro.core.task import default_segments
+
+    def chain(ins, out):
+        r, w = default_segments(ins, (out,))
+        session.submit(Task(opcode="soak_axpy", fn=_axpy, inputs=ins,
+                            outputs=(out,), read_segments=r,
+                            write_segments=w))
+
+    a = [pool.alloc((8,), np.float32, value=jnp.full(8, float(i)))
+         for i in range(8)]
+    for i in range(0, 8, 2):
+        chain((a[i], a[i + 1]), a[i + 1])
+    session.flush()
+    released = 0
+    if hasattr(session, "release_buffer"):
+        released = sum(bool(session.release_buffer(b)) for b in a[2:])
+    # waste is now 6/8 >= 0.5: the device session compacts before the
+    # next epoch executes, and these chains recycle the dead rows
+    b = [pool.alloc((8,), np.float32, value=jnp.full(8, 10.0 + i))
+         for i in range(3)]
+    chain((a[0], a[1]), b[0])
+    chain((b[0], b[1]), b[2])
+    chain((b[2], a[0]), b[1])
+    session.flush()
+    keep = a[:2] + b
+    return [np.asarray(x.value) for x in keep], released
+
+
+def main() -> None:
+    import jax
+
+    from repro.runtime import SessionServer
+
+    cfg = _soak_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp_size=1)
+    n_phases = 6 if smoke() else 12
+    reqs_per_phase = 4 if smoke() else 10
+    chains_per_phase = 4 if smoke() else 6
+    max_new = 2 if smoke() else 3
+    history_limit = 64
+
+    server = SessionServer(cfg, params, max_slots=2, max_len=16,
+                           scheduler="device", history_limit=history_limit)
+    rng = np.random.RandomState(0)
+
+    # warmup: compile every decode arity once so jit bursts don't pollute
+    # the RSS / latency checkpoints
+    for k in (1, 2):
+        for _ in range(k):
+            server.submit(rng.randint(0, cfg.vocab, 5), max_new=2)
+        server.run_until_drained()
+    rss0 = _rss_mb()
+
+    checkpoints = []
+    p95 = []
+    half = n_phases // 2
+    # long-lived "carrier" buffers per shape regime (the serving analogy:
+    # resident KV blocks) keep the class's live count above the freed
+    # per-phase scratch, so the waste ratio stays under the compaction
+    # threshold and the scratch rows RECYCLE through the free-list; only
+    # the regime switch (everything dead at once) compacts
+    carrier_chains = chains_per_phase + 2
+    carriers: list = []
+    prev_names: list = []
+    for phase in range(n_phases):
+        prompts = [rng.randint(0, cfg.vocab, 5) for _ in range(reqs_per_phase)]
+        arrivals = np.cumsum(
+            np.random.RandomState(1000 + phase).exponential(
+                0.005, size=reqs_per_phase))
+        done = _drive_phase(server, prompts, arrivals, max_new)
+        assert len(done) == reqs_per_phase
+        p95.append(float(np.percentile([r.latency for r in done], 95)))
+        # per-phase aux residency: free LAST phase's buffers (free-hook ->
+        # arena free-list) immediately before this phase's allocs, so the
+        # new chains RECYCLE the dead rows instead of growing the slab.
+        # At the mid-soak shape switch the old class's rows go dead with
+        # no taker — that's the compaction epoch.
+        for name in prev_names:
+            server.pool.free(name)
+        if phase in (0, half):  # regime switch: retire the old carriers
+            for name in carriers:
+                server.pool.free(name)
+            carriers = _aux_chains(server.session, server.pool, phase,
+                                   n_phases, carrier_chains, "carrier")
+        prev_names = _aux_chains(server.session, server.pool, phase,
+                                 n_phases, chains_per_phase, "aux")
+        server.session.flush()
+        stats = server.session.session_stats()
+        stats["rss_mb"] = _rss_mb()
+        stats["task_kinds"] = len(server.task_kinds)
+        checkpoints.append(stats)
+
+    slab = [c["slab_bytes"] for c in checkpoints]
+    entries = [c["plan_cache_entries"] for c in checkpoints]
+    last = checkpoints[-1]
+
+    emit("soak", "phases", n_phases)
+    emit("soak", "requests", n_phases * reqs_per_phase)
+    emit("soak", "slab_bytes_per_phase", "|".join(str(s) for s in slab))
+    emit("soak", "plan_cache_entries_per_phase",
+         "|".join(str(e) for e in entries))
+    emit("soak", "arena_recycled_rows", last["arena_recycled_rows"])
+    emit("soak", "arena_compactions", last["arena_compactions"])
+    emit("soak", "plan_cache_invalidations", last["plan_cache_invalidations"])
+    emit("soak", "rss_start_mb", round(rss0, 1))
+    emit("soak", "rss_end_mb", round(last["rss_mb"], 1))
+    emit("soak", "p95_first_ms", round(p95[0] * 1e3, 1))
+    emit("soak", "p95_last_ms", round(p95[-1] * 1e3, 1))
+
+    # gates ----------------------------------------------------------------
+    slab_flat = (slab[half - 1] == slab[1]          # class-A regime flat
+                 and slab[-1] == slab[half + 1])    # class-B regime flat
+    emit("soak", "slab_flat", int(slab_flat))
+    emit("soak", "plan_cache_bounded",
+         int(max(entries) <= PLAN_CACHE_CAP))
+    emit("soak", "rows_recycled", int(last["arena_recycled_rows"] > 0))
+    emit("soak", "compacted", int(last["arena_compactions"] >= 1
+                                  and last["plan_cache_invalidations"] >= 1))
+    emit("soak", "rss_bounded",
+         int(last["rss_mb"] - rss0 <= RSS_MARGIN_MB))
+    emit("soak", "p95_stable", int(p95[-1] <= P95_FACTOR * max(p95[0], 1e-4)))
+    emit("soak", "bookkeeping_bounded",
+         int(last["task_kinds"] == 0
+             and len(server.report_log) <= history_limit
+             and len(server.occupancy_samples) <= history_limit))
+    server.close()
+
+    # bit-identity across a compaction epoch (differential leg) ------------
+    from repro.core import make_session
+    from repro.core.buffers import BufferPool
+
+    ref, _ = _identity_program(make_session("serial"), BufferPool())
+    dev_session = make_session("device", window_size=16)
+    got, released = _identity_program(dev_session, BufferPool())
+    dstats = dev_session.session_stats()
+    dev_session.close()
+    matches = (released == 6
+               and dstats["arena_compactions"] >= 1
+               and len(got) == len(ref)
+               and all(np.array_equal(g, r) for g, r in zip(got, ref)))
+    emit("soak", "matches_serial", int(matches))
+
+    # counterfactual: the pre-fix leak (no free) — monotone slab growth ----
+    from repro.core import DeviceSession
+
+    leaky = DeviceSession(window_size=16)
+    leaky_pool = BufferPool()
+    leak_slab = []
+    for phase in range(4):
+        _aux_chains(leaky, leaky_pool, phase=0, n_phases=2,
+                    k=chains_per_phase, tag=f"leak{phase}")
+        leaky.flush()
+        leak_slab.append(leaky.session_stats()["slab_bytes"])
+    leaky.close()
+    emit("soak", "counterfactual_slab_bytes_per_phase",
+         "|".join(str(s) for s in leak_slab))
+    emit("soak", "counterfactual_grows",
+         int(all(b > a for a, b in zip(leak_slab, leak_slab[1:]))))
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ from . import (
     bench_rl_e2e,
     bench_serving,
     bench_sim_speedup,
+    bench_soak,
     bench_static_dnn,
     bench_window_size,
     common,
@@ -49,6 +50,7 @@ SECTIONS = {
     "frontier": bench_frontier,          # beyond-paper (DESIGN §9)
     "device": bench_device,              # ACS-HW analogue (DESIGN §2 A3)
     "serving": bench_serving,            # live sessions (DESIGN §10)
+    "soak": bench_soak,                  # lifetime invariants (DESIGN §2 A3)
 }
 
 # The sections --smoke runs when none are named: the ones exercising plan

@@ -30,8 +30,22 @@ workloads:
   rows added since the last pack (new submissions referencing new
   buffers), and ``update_rows`` refreshes individual rows whose host
   values changed (host-fallback writes between device epochs). Row and
-  class ids are stable for the arena's lifetime, so lowered dispatch
-  tables stay valid across epochs.
+  class ids are stable *between compactions*, so lowered dispatch tables
+  stay valid across epochs.
+* Rows have a **lifecycle** (DESIGN §2 A3 — the unbounded-lifetime gap):
+  ``free(buf)`` releases a buffer's row into its class's free-list, and
+  ``add`` recycles free rows before growing the slab — a long-lived
+  session fed per-request buffers reuses a bounded row set instead of
+  leaking one row per request. Recycled rows inside the packed watermark
+  are tracked and refreshed from host values at the next
+  ``pack_incremental`` (the device row still holds the dead buffer's
+  bits). When a class's dead-row fraction crosses ``compact_waste``
+  (``needs_compaction``), ``compact`` rebuilds the class: live rows are
+  renumbered densely (old order preserved), the device slab is gathered
+  in place (no host round-trip for already-packed rows), and the class's
+  **generation** counter bumps — the signal consumers holding static row
+  addresses (the `DeviceSession` plan cache) use to invalidate exactly
+  the affected entries.
 """
 
 from __future__ import annotations
@@ -93,17 +107,40 @@ class SlabArena:
     """Assigns buffers to (class, row) slab coordinates and moves values
     host<->device around a lowered stream's single dispatch."""
 
-    def __init__(self, pad_multiple: int = 8):
+    def __init__(self, pad_multiple: int = 8, *, compact_waste: float = 0.5,
+                 compact_min_rows: int = 8):
         self.pad_multiple = pad_multiple
+        # Compaction policy: rebuild a class once it holds at least
+        # compact_min_rows rows and its dead fraction reaches compact_waste.
+        self.compact_waste = compact_waste
+        self.compact_min_rows = compact_min_rows
         self._class_ids: Dict[ShapeClass, int] = {}
         self._classes: List[ShapeClass] = []
-        self._rows: List[List[Buffer]] = []  # per class, row -> Buffer
+        # per class, row -> Buffer (None = freed row awaiting reuse)
+        self._rows: List[List[Optional[Buffer]]] = []
         # id(Buffer) -> (class, row); _rows holds the references, keeping
-        # the ids stable for the arena's lifetime.
+        # the ids stable between compactions.
         self._addr: Dict[int, Tuple[int, int]] = {}
         # Per-class count of rows already materialized into device slabs
         # (the pack_incremental watermark).
         self._packed_rows: List[int] = []
+        # Per-class LIFO free-lists of recyclable row indices.
+        self._free: List[List[int]] = []
+        # Per-class rows below the packed watermark that were re-assigned to
+        # a new buffer since the last pack: the device row still holds the
+        # dead occupant's bits and must be refreshed at the next
+        # pack_incremental.
+        self._reused: List[set] = []
+        # Per-class compaction counters; a cached plan built against a
+        # class's addresses is valid iff the generation it recorded still
+        # matches. `generation` is the global sum (cheap change detector).
+        self._generation: List[int] = []
+        self.generation = 0
+        # Lifecycle counters (surfaced through session_stats / benchmarks).
+        self.freed_rows = 0
+        self.recycled_rows = 0
+        self.compactions = 0
+        self.unpack_rows_written = 0
 
     # -- classification ----------------------------------------------------
     def class_of(self, buf: Buffer) -> ShapeClass:
@@ -125,10 +162,39 @@ class SlabArena:
             self._classes.append(cls)
             self._rows.append([])
             self._packed_rows.append(0)
-        row = len(self._rows[cid])
-        self._rows[cid].append(buf)
+            self._free.append([])
+            self._reused.append(set())
+            self._generation.append(0)
+        if self._free[cid]:
+            row = self._free[cid].pop()
+            self._rows[cid][row] = buf
+            self.recycled_rows += 1
+            if row < self._packed_rows[cid]:
+                # The materialized slab row holds the previous occupant's
+                # value; refresh it from host at the next incremental pack.
+                self._reused[cid].add(row)
+        else:
+            row = len(self._rows[cid])
+            self._rows[cid].append(buf)
         self._addr[key] = (cid, row)
         return cid, row
+
+    def free(self, buf: Buffer) -> bool:
+        """Release ``buf``'s row into its class free-list for recycling.
+
+        Returns False (no-op) when the buffer is not arena-resident. The
+        caller is responsible for ordering: a row must not be freed while a
+        pending task still references its buffer.
+        """
+        addr = self._addr.pop(id(buf), None)
+        if addr is None:
+            return False
+        cid, row = addr
+        self._rows[cid][row] = None
+        self._free[cid].append(row)
+        self._reused[cid].discard(row)
+        self.freed_rows += 1
+        return True
 
     def add_tasks(self, tasks: Iterable[Task]) -> None:
         for t in tasks:
@@ -161,22 +227,46 @@ class SlabArena:
     def n_classes(self) -> int:
         return len(self._classes)
 
-    def rows(self, class_id: int) -> List[Buffer]:
+    def rows(self, class_id: int) -> List[Optional[Buffer]]:
         return list(self._rows[class_id])
+
+    def class_generation(self, class_id: int) -> int:
+        return self._generation[class_id]
+
+    def live_rows(self, class_id: Optional[int] = None) -> int:
+        if class_id is not None:
+            return len(self._rows[class_id]) - len(self._free[class_id])
+        return sum(len(r) for r in self._rows) - sum(len(f) for f in self._free)
+
+    def free_rows(self, class_id: Optional[int] = None) -> int:
+        if class_id is not None:
+            return len(self._free[class_id])
+        return sum(len(f) for f in self._free)
+
+    def slab_bytes(self) -> int:
+        """Device footprint of the slabs the next pack materializes: total
+        rows (live + dead-but-unreclaimed) x padded row bytes per class."""
+        total = 0
+        for cid, cls in enumerate(self._classes):
+            total += len(self._rows[cid]) * cls.row_elems * np.dtype(cls.dtype).itemsize
+        return total
 
     def padding_waste(self) -> Dict[str, Dict[str, Any]]:
         """Per-class occupancy: how many slab cells hold real values vs
-        trailing-dimension padding."""
+        trailing-dimension padding and dead (freed, not yet compacted)
+        rows."""
         out: Dict[str, Dict[str, Any]] = {}
         for cid, cls in enumerate(self._classes):
             bufs = self._rows[cid]
             padded = cls.row_elems
             used = sum(
-                int(np.prod(b.shape, dtype=np.int64)) if b.shape else 1 for b in bufs
+                int(np.prod(b.shape, dtype=np.int64)) if b.shape else 1
+                for b in bufs if b is not None
             )
             total = padded * len(bufs)
             out[cls.label] = {
                 "rows": len(bufs),
+                "dead_rows": len(self._free[cid]),
                 "padded_elems_per_row": padded,
                 "used_elems": used,
                 "waste_frac": round(1.0 - used / total, 4) if total else 0.0,
@@ -189,11 +279,75 @@ class SlabArena:
             padded += cls.row_elems * len(self._rows[cid])
             used += sum(
                 int(np.prod(b.shape, dtype=np.int64)) if b.shape else 1
-                for b in self._rows[cid]
+                for b in self._rows[cid] if b is not None
             )
         return 1.0 - used / padded if padded else 0.0
 
+    # -- compaction ---------------------------------------------------------
+    def needs_compaction(self) -> List[int]:
+        """Class ids whose dead-row fraction crossed the policy threshold."""
+        out = []
+        for cid in range(len(self._classes)):
+            total = len(self._rows[cid])
+            if total >= self.compact_min_rows and \
+                    len(self._free[cid]) / total >= self.compact_waste:
+                out.append(cid)
+        return out
+
+    def compact(self, slabs: Optional[Sequence[Any]] = None,
+                class_ids: Optional[Iterable[int]] = None,
+                ) -> Tuple[Optional[List[Any]], Dict[int, Dict[int, int]]]:
+        """Rebuild the given classes' slabs with dead rows squeezed out.
+
+        Live rows keep their relative order, so already-packed rows form a
+        dense prefix and the new slab is a pure device-side gather of the
+        old one — freed rows' values are dropped, never round-tripped
+        through the host. Rows beyond the old watermark were never
+        materialized; the watermark resets to the packed-live count and the
+        next :meth:`pack_incremental` appends them as usual.
+
+        Returns ``(new_slabs, moved)`` where ``moved[cid]`` maps old row ->
+        new row for every surviving row of a compacted class. Each
+        compacted class's generation (and the global ``generation``) bumps,
+        invalidating any consumer-cached addressing built against it.
+        ``slabs=None`` skips the device gather (un-materialized arena).
+        """
+        if class_ids is None:
+            class_ids = self.needs_compaction()
+        out = None if slabs is None else list(slabs)
+        moved: Dict[int, Dict[int, int]] = {}
+        for cid in class_ids:
+            if not self._free[cid]:
+                continue
+            rows = self._rows[cid]
+            packed = self._packed_rows[cid]
+            live_old = [r for r, b in enumerate(rows) if b is not None]
+            remap = {old: new for new, old in enumerate(live_old)}
+            # ascending order => packed live rows are exactly the prefix
+            n_packed_live = sum(1 for r in live_old if r < packed)
+            for old in live_old:
+                self._addr[id(rows[old])] = (cid, remap[old])
+            self._rows[cid] = [rows[r] for r in live_old]
+            self._free[cid] = []
+            self._reused[cid] = {remap[r] for r in self._reused[cid]}
+            self._packed_rows[cid] = n_packed_live
+            if out is not None and cid < len(out):
+                keep = live_old[:n_packed_live]
+                out[cid] = out[cid][jnp.asarray(keep, dtype=jnp.int32)] \
+                    if keep else out[cid][:0]
+            moved[cid] = remap
+            self._generation[cid] += 1
+            self.generation += 1
+            self.compactions += 1
+        return out, moved
+
     # -- host <-> device movement ------------------------------------------
+    def _row_value(self, buf: Optional[Buffer], cls: ShapeClass):
+        if buf is None:
+            # Dead row (freed, not yet recycled/compacted): placeholder.
+            return jnp.zeros(cls.padded_shape, dtype=np.dtype(cls.dtype))
+        return self._padded_value(buf, cls)
+
     def _padded_value(self, buf: Buffer, cls: ShapeClass):
         val = buf.value
         if val is None:
@@ -218,9 +372,10 @@ class SlabArena:
         slabs = []
         for cid, cls in enumerate(self._classes):
             dtype = np.dtype(cls.dtype)
-            rows = [self._padded_value(b, cls) for b in self._rows[cid]]
+            rows = [self._row_value(b, cls) for b in self._rows[cid]]
             slabs.append(jnp.stack(rows).astype(dtype))
             self._packed_rows[cid] = len(self._rows[cid])
+            self._reused[cid].clear()  # every row just re-read from host
         return slabs
 
     def pack_incremental(self, slabs: Optional[Sequence[Any]]) -> List[Any]:
@@ -234,19 +389,27 @@ class SlabArena:
             return self.pack()
         out: List[Any] = list(slabs)
         for cid, cls in enumerate(self._classes):
+            dtype = np.dtype(cls.dtype)
             total = len(self._rows[cid])
             packed = self._packed_rows[cid] if cid < len(slabs) else 0
-            if packed >= total:
-                continue
-            dtype = np.dtype(cls.dtype)
-            fresh = jnp.stack(
-                [self._padded_value(b, cls) for b in self._rows[cid][packed:]]
-            ).astype(dtype)
-            if cid < len(slabs):
-                out[cid] = jnp.concatenate([slabs[cid], fresh], axis=0)
-            else:
-                out.append(fresh)
-            self._packed_rows[cid] = total
+            if packed < total:
+                fresh = jnp.stack(
+                    [self._row_value(b, cls) for b in self._rows[cid][packed:]]
+                ).astype(dtype)
+                if cid < len(out):
+                    out[cid] = jnp.concatenate([out[cid], fresh], axis=0)
+                else:
+                    out.append(fresh)
+                self._packed_rows[cid] = total
+            if self._reused[cid]:
+                # Recycled rows inside the watermark: the slab still holds
+                # the dead occupant's bits — refresh from host values.
+                rows = sorted(self._reused[cid])
+                vals = jnp.stack(
+                    [self._row_value(self._rows[cid][r], cls) for r in rows]
+                ).astype(dtype)
+                out[cid] = out[cid].at[jnp.asarray(rows, dtype=jnp.int32)].set(vals)
+                self._reused[cid].clear()
         return out
 
     def update_rows(self, slabs: Sequence[Any],
@@ -266,15 +429,30 @@ class SlabArena:
         """Write slab rows back into buffer values, slicing padding off.
 
         ``only`` restricts writeback to the given buffers (e.g. the ones
-        some task actually wrote); default writes every resident row.
+        some task actually wrote) and resolves each through the address map
+        — O(|only|), not O(total resident rows); default writes every live
+        resident row. Buffers already released are skipped: their rows may
+        have been recycled and no host value is owed.
         """
-        wanted = None if only is None else {id(b) for b in only}
+        if only is not None:
+            for buf in only:
+                addr = self._addr.get(id(buf))
+                if addr is None:
+                    continue
+                cid, row = addr
+                self._write_back(buf, slabs[cid], row, self._classes[cid])
+            return
         for cid, cls in enumerate(self._classes):
             slab = slabs[cid]
             for row, buf in enumerate(self._rows[cid]):
-                if wanted is not None and id(buf) not in wanted:
+                if buf is None:
                     continue
-                val = slab[row]
-                if tuple(buf.shape) != cls.padded_shape:
-                    val = val[tuple(slice(0, s) for s in buf.shape)]
-                buf.value = val
+                self._write_back(buf, slab, row, cls)
+
+    def _write_back(self, buf: Buffer, slab: Any, row: int,
+                    cls: ShapeClass) -> None:
+        val = slab[row]
+        if tuple(buf.shape) != cls.padded_shape:
+            val = val[tuple(slice(0, s) for s in buf.shape)]
+        buf.value = val
+        self.unpack_rows_written += 1

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -120,6 +120,15 @@ class BufferPool:
         self._buffers: Dict[str, Buffer] = {}
         self._lock = threading.Lock()
         self._anon = 0
+        self._free_hooks: List[Callable[[Buffer], None]] = []
+
+    def add_free_hook(self, cb: Callable[[Buffer], None]) -> None:
+        """Subscribe to buffer release: ``cb(buf)`` fires after ``free``
+        drops the pool's reference. This is how downstream residency
+        tracking (the device arena's row free-list) learns a buffer's
+        lifetime ended without the pool knowing the consumer exists."""
+        with self._lock:
+            self._free_hooks.append(cb)
 
     def alloc(
         self,
@@ -149,11 +158,16 @@ class BufferPool:
         Virtual addresses are NOT recycled — the bump pointer stays
         monotone, so a freed buffer's range remains retired and past
         segment checks stay exact. Long-running runtimes (the serving
-        driver's per-request prompt buffers) must free or they leak."""
+        driver's per-request prompt buffers) must free or they leak.
+        Registered free hooks fire after the reference drops (outside the
+        pool lock — hooks may take their own locks)."""
         with self._lock:
             if name not in self._buffers:
                 raise KeyError(f"buffer {name!r} not allocated")
-            del self._buffers[name]
+            buf = self._buffers.pop(name)
+            hooks = tuple(self._free_hooks)
+        for cb in hooks:
+            cb(buf)
 
     def from_array(self, arr: Any, name: Optional[str] = None) -> Buffer:
         arr_np_dtype = np.dtype(str(arr.dtype)) if hasattr(arr, "dtype") else np.dtype(np.float32)

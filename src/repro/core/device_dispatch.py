@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -824,23 +825,37 @@ class DeviceSession(SchedulerSession):
         plan_mode: str = "wave",
         max_group: Optional[int] = None,
         pad_multiple: int = 8,
+        compact_waste: float = 0.5,
+        compact_min_rows: int = 8,
+        plan_cache_limit: Optional[int] = 512,
+        history_limit: Optional[int] = None,
     ):
         if plan_mode not in PLAN_MODES:
             raise ValueError(
                 f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
-        super().__init__(window_size)
+        super().__init__(window_size, history_limit=history_limit)
         self.registry = registry if registry is not None else DeviceOpRegistry(strict=False)
         self.plan_mode = plan_mode
         self.max_group = max_group
-        self.arena = SlabArena(pad_multiple=pad_multiple)
+        self.arena = SlabArena(pad_multiple=pad_multiple,
+                               compact_waste=compact_waste,
+                               compact_min_rows=compact_min_rows)
         self._slabs: Optional[List[Any]] = None
         # id(Buffer) -> Buffer whose freshest value lives device-side
         # (slab newer than host) / host-side (host newer than slab).
         self._device_dirty: Dict[int, Buffer] = {}
         self._host_dirty: Dict[int, Buffer] = {}
         # structure key (plan signatures x arena addresses) -> lowered
-        # (run_fn, tables, n_steps): the session-scope plan cache.
+        # (run_fn, tables, n_steps, class_gens): the session-scope plan
+        # cache. Entries carry the arena generation of every class they
+        # address; a compaction moves rows, so entries touching a compacted
+        # class are invalidated (eagerly at compaction, and belt-and-braces
+        # on hit via the recorded generations). Insertion order doubles as
+        # LRU order (hits reinsert), bounded by plan_cache_limit.
         self._plan_cache: Dict[Tuple, Tuple] = {}
+        self.plan_cache_limit = plan_cache_limit
+        self.plan_cache_evictions = 0
+        self.plan_cache_invalidations = 0
         # static step-spec structure -> compiled program (shared across
         # plan-cache entries that differ only in row addressing).
         self._programs: Dict[Tuple, Tuple[Callable, Any]] = {}
@@ -856,7 +871,8 @@ class DeviceSession(SchedulerSession):
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
         self.host_syncs = 0
-        self.epoch_log: List[Dict[str, Any]] = []
+        self.epoch_log: Any = ([] if history_limit is None
+                               else deque(maxlen=history_limit))
 
     # -- epoch planning ----------------------------------------------------
     def _plan_epoch(self) -> List[List[Task]]:
@@ -904,18 +920,47 @@ class DeviceSession(SchedulerSession):
         with self._lock:
             self._sync_to_host(list(self._device_dirty.values()))
 
+    # -- row lifecycle -------------------------------------------------------
+    def release_buffer(self, buf: Buffer) -> bool:
+        """Release a buffer the producer is done with: its arena row joins
+        the class free-list for recycling and its dirty-tracking entries
+        drop. The caller guarantees no pending or future task references
+        the buffer (serving wires this to ``BufferPool.free`` via a free
+        hook, which fires after the owning request retired). The device
+        value is NOT synced back — a released buffer owes no host value."""
+        with self._lock:
+            self._device_dirty.pop(id(buf), None)
+            self._host_dirty.pop(id(buf), None)
+            return self.arena.free(buf)
+
+    def _maybe_compact(self) -> None:
+        """Compact classes whose dead-row waste crossed the arena threshold
+        (called with the lock held, between dispatches). Cached plans hold
+        static row addresses, so every plan-cache entry addressing a
+        compacted class is dropped — exactly those, never the full cache:
+        entries over untouched classes stay valid and keep hitting."""
+        cids = self.arena.needs_compaction()
+        if not cids:
+            return
+        self._slabs, moved = self.arena.compact(self._slabs, cids)
+        stale = [k for k, entry in self._plan_cache.items()
+                 if any(cid in moved for cid, _ in entry[3])]
+        for k in stale:
+            del self._plan_cache[k]
+        self.plan_cache_invalidations += len(stale)
+
     # Observers registered AFTER an unwatched epoch retired their task hit
     # the base class's fire-immediately paths — sync first, so a late
     # callback/ticket holder reads host values as fresh as an early one's.
     def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
         with self._lock:
-            if task.tid in self._retired_tids:
+            if self._is_retired(task.tid):
                 self._sync_to_host(list(self._device_dirty.values()))
         super().on_task_retired(task, cb)
 
     def ticket(self, task: Task) -> TaskTicket:
         with self._lock:
-            if task.tid in self._retired_tids:
+            if self._is_retired(task.tid):
                 self._sync_to_host(list(self._device_dirty.values()))
             return super().ticket(task)
 
@@ -936,10 +981,19 @@ class DeviceSession(SchedulerSession):
         )
 
     def _execute_device(self, dev_plan: List[List[Task]]) -> None:
+        self._maybe_compact()
         tasks = [t for step in dev_plan for t in step]
         self.arena.add_tasks(tasks)
         key = (self.plan_mode, self._structure_key(dev_plan))
         cached = self._plan_cache.get(key)
+        if cached is not None and any(
+                self.arena.class_generation(cid) != gen
+                for cid, gen in cached[3]):
+            # A compaction moved this entry's rows after it was built (the
+            # eager sweep should have caught it — this is the safety net).
+            del self._plan_cache[key]
+            self.plan_cache_invalidations += 1
+            cached = None
         if cached is None:
             steps = lower_plan(dev_plan, self.registry, self.arena)
             # Program cache keys on step structure alone: jit retraces by
@@ -953,12 +1007,23 @@ class DeviceSession(SchedulerSession):
                 self.stats.compiles += 1
             run_fn, runs = prog
             tables = _run_tables(steps, runs)
-            cached = (run_fn, tables, len(steps))
+            class_ids = sorted({
+                spec.class_id for st in steps
+                for spec in st.spec.inputs + st.spec.outputs})
+            gens = tuple(
+                (cid, self.arena.class_generation(cid)) for cid in class_ids)
+            cached = (run_fn, tables, len(steps), gens)
             self._plan_cache[key] = cached
             self.plan_cache_misses += 1
+            if self.plan_cache_limit is not None and \
+                    len(self._plan_cache) > self.plan_cache_limit:
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+                self.plan_cache_evictions += 1
         else:
+            # LRU touch: reinsertion moves the entry to the young end.
+            self._plan_cache[key] = self._plan_cache.pop(key)
             self.plan_cache_hits += 1
-        run_fn, tables, n_steps = cached
+        run_fn, tables, n_steps, _ = cached
 
         # Persistent slabs: append rows for newly seen buffers, refresh
         # rows whose host values changed since they were packed.
@@ -1087,10 +1152,20 @@ class DeviceSession(SchedulerSession):
                 "host_task_dispatches": self.host_task_dispatches,
                 "plan_cache_hits": self.plan_cache_hits,
                 "plan_cache_misses": self.plan_cache_misses,
+                "plan_cache_entries": len(self._plan_cache),
+                "plan_cache_evictions": self.plan_cache_evictions,
+                "plan_cache_invalidations": self.plan_cache_invalidations,
                 "compiled_programs": len(self._programs),
                 "host_syncs": self.host_syncs,
                 "n_classes": self.arena.n_classes(),
                 "padding_waste_frac": round(self.arena.total_waste_frac(), 4),
+                # row lifecycle (DESIGN §2 A3 gap (2))
+                "slab_bytes": self.arena.slab_bytes(),
+                "arena_generation": self.arena.generation,
+                "arena_live_rows": self.arena.live_rows(),
+                "arena_free_rows": self.arena.free_rows(),
+                "arena_recycled_rows": self.arena.recycled_rows,
+                "arena_compactions": self.arena.compactions,
                 # dependency-engine accounting (probe vs pairwise-equiv)
                 "dep_checks": self.window.stats.dep_checks,
                 "scoreboard_probes": self.window.stats.scoreboard_probes,

@@ -143,10 +143,11 @@ class FrontierSession(SchedulerSession):
         executor: Optional[GroupExecutor] = None,
         max_inflight: int = 8,
         max_group: Optional[int] = None,
+        history_limit: Optional[int] = None,
     ):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
-        super().__init__(window_size)
+        super().__init__(window_size, history_limit=history_limit)
         ex = executor if executor is not None else GroupExecutor()
         if ex.inflight:
             # One live session per executor: poll_landed would hand this

@@ -225,7 +225,8 @@ def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
 
 def make_session(name: str, window_size: int = 32, num_streams: int = 4,
                  max_inflight: int = 8, max_group: Optional[int] = None,
-                 plan_mode: str = "wave"):
+                 plan_mode: str = "wave",
+                 history_limit: Optional[int] = None):
     """Factory over the live scheduler sessions (DESIGN.md §10): returns an
     open :class:`~.session.SchedulerSession` that producers feed with
     ``submit()`` while it dependency-checks, launches, and retires
@@ -243,19 +244,24 @@ def make_session(name: str, window_size: int = 32, num_streams: int = 4,
     if plan_mode not in PLAN_MODES:
         raise ValueError(f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
     if name == "serial":
-        return WaveSession(window_size=1, executor=SerialExecutor())
+        return WaveSession(window_size=1, executor=SerialExecutor(),
+                           history_limit=history_limit)
     if name == "wave":
-        return WaveSession(window_size=window_size)
+        return WaveSession(window_size=window_size,
+                           history_limit=history_limit)
     if name == "threaded":
-        return ThreadedSession(window_size=window_size, num_streams=num_streams)
+        return ThreadedSession(window_size=window_size,
+                               num_streams=num_streams,
+                               history_limit=history_limit)
     if name == "frontier":
         from .frontier import FrontierSession
 
         return FrontierSession(window_size=window_size,
-                               max_inflight=max_inflight, max_group=max_group)
+                               max_inflight=max_inflight, max_group=max_group,
+                               history_limit=history_limit)
     if name == "device":
         from .device_dispatch import DeviceSession
 
         return DeviceSession(window_size=window_size, plan_mode=plan_mode,
-                             max_group=max_group)
+                             max_group=max_group, history_limit=history_limit)
     raise ValueError(f"unknown session {name!r}; choose from {SESSION_NAMES}")

@@ -45,15 +45,22 @@ single-threaded sessions make progress only inside ``poll``/``drive``/
 
 Bookkeeping that feeds the final report (the wave/group schedule traces,
 the retired-tid set backing ``on_task_retired``'s fire-immediately
-semantics) is session-lifetime state: a server fed unbounded streams
-should recycle its session periodically — close, report, reopen — the
-way it rotates a log.
+semantics) defaults to session-lifetime state. A server fed unbounded
+streams passes ``history_limit=N`` instead: schedule traces become rolling
+windows (``deque(maxlen=N)``), per-tag counts keep the N most recent tags,
+and the retired-tid set evicts its oldest members into a merged
+interval list — ``_is_retired`` stays exact for every tid ever retired at
+O(N + log intervals) memory, so fire-immediately callback semantics
+survive the rotation. The host-memory boundedness this buys a long-lived
+server is asserted by ``benchmarks/bench_soak.py``.
 """
 
 from __future__ import annotations
 
+import bisect
 import threading
 import time
+from collections import deque
 from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Union
 
 import jax
@@ -91,16 +98,30 @@ class SchedulerSession:
     the dispatch policy via ``_pump`` (one non-blocking scheduling step)
     and may override ``drive``/``flush``."""
 
-    def __init__(self, window_size: int = 32):
+    def __init__(self, window_size: int = 32,
+                 history_limit: Optional[int] = None):
+        if history_limit is not None and history_limit < 1:
+            raise ValueError(f"history_limit must be >= 1, got {history_limit}")
         self.window = SchedulingWindow(window_size)
         self.window.open_input()
         self._lock = threading.RLock()
         self._t0 = time.perf_counter()
-        self.waves: List[List[int]] = []
-        self.groups: List[Any] = []  # GroupTrace entries (frontier)
+        self.history_limit = history_limit
+        if history_limit is None:
+            self.waves: Any = []
+            self.groups: Any = []  # GroupTrace entries (frontier)
+        else:
+            self.waves = deque(maxlen=history_limit)
+            self.groups = deque(maxlen=history_limit)
         self._submitted = 0
         self._retired = 0
         self._retired_tids: Set[int] = set()
+        # Bounded mode: retirement order of _retired_tids members, and the
+        # evicted tids merged into sorted disjoint [lo, hi] intervals so
+        # _is_retired stays exact after rotation.
+        self._retired_order: Optional[deque] = (
+            deque() if history_limit is not None else None)
+        self._retired_evicted: List[List[int]] = []
         self._fresh: List[Task] = []  # retired since last drain
         self._watchers: Dict[int, List[RetireCallback]] = {}
         self._tickets: Dict[int, TaskTicket] = {}
@@ -160,11 +181,44 @@ class SchedulerSession:
         with self._lock:
             self._listeners.append(cb)
 
+    def _is_retired(self, tid: int) -> bool:
+        """Exact has-this-tid-ever-retired test (lock held): the live set,
+        plus the merged intervals of tids evicted under ``history_limit``."""
+        if tid in self._retired_tids:
+            return True
+        iv = self._retired_evicted
+        if not iv:
+            return False
+        # last interval whose lo <= tid ([tid, inf] sorts after any of them)
+        i = bisect.bisect_right(iv, [tid, float("inf")]) - 1
+        return i >= 0 and iv[i][0] <= tid <= iv[i][1]
+
+    def _evict_retired_tid(self, tid: int) -> None:
+        """Move one tid from the live retired set into the interval list
+        (lock held), merging with adjacent intervals."""
+        iv = self._retired_evicted
+        i = bisect.bisect_left(iv, [tid, tid])
+        left = i > 0 and iv[i - 1][1] + 1 >= tid
+        right = i < len(iv) and iv[i][0] <= tid + 1
+        if left and tid <= iv[i - 1][1]:
+            return  # already covered
+        if left and right and iv[i][0] == tid + 1:
+            iv[i - 1][1] = iv[i][1]
+            del iv[i]
+        elif left:
+            iv[i - 1][1] = tid
+        elif right and iv[i][0] == tid + 1:
+            iv[i][0] = tid
+        elif right and iv[i][0] <= tid:
+            pass  # already covered
+        else:
+            iv.insert(i, [tid, tid])
+
     def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
         """Per-task completion callback; fires immediately if the task has
         already retired."""
         with self._lock:
-            if task.tid in self._retired_tids:
+            if self._is_retired(task.tid):
                 fire_now = True
             else:
                 self._watchers.setdefault(task.tid, []).append(cb)
@@ -178,7 +232,7 @@ class SchedulerSession:
             tk = self._tickets.get(task.tid)
             if tk is None:
                 tk = TaskTicket(task)
-                if task.tid in self._retired_tids:
+                if self._is_retired(task.tid):
                     tk._event.set()
                 else:
                     self._tickets[task.tid] = tk
@@ -243,10 +297,20 @@ class SchedulerSession:
         re-entrant lock so they may submit into this session."""
         self._retired += 1
         self._retired_tids.add(task.tid)
+        if self._retired_order is not None:
+            self._retired_order.append(task.tid)
+            while len(self._retired_tids) > self.history_limit:
+                old = self._retired_order.popleft()
+                if old in self._retired_tids:
+                    self._retired_tids.discard(old)
+                    self._evict_retired_tid(old)
         self._fresh.append(task)
         tag = task.stream_tag
         if tag is not None:
             self.retired_by_tag[tag] = self.retired_by_tag.get(tag, 0) + 1
+            if self.history_limit is not None and \
+                    len(self.retired_by_tag) > self.history_limit:
+                self.retired_by_tag.pop(next(iter(self.retired_by_tag)))
         ticket = self._tickets.pop(task.tid, None)
         if ticket is not None:
             ticket._event.set()
@@ -263,8 +327,9 @@ class WaveSession(SchedulerSession):
     property); ``WaveScheduler.run`` is the closed-batch wrapper."""
 
     def __init__(self, window_size: int = 32, executor: Optional[Any] = None,
-                 max_wave: Optional[int] = None):
-        super().__init__(window_size)
+                 max_wave: Optional[int] = None,
+                 history_limit: Optional[int] = None):
+        super().__init__(window_size, history_limit=history_limit)
         self.executor = executor if executor is not None else FusedWaveExecutor()
         self.max_wave = max_wave
 
@@ -299,8 +364,9 @@ class ThreadedSession(SchedulerSession):
     burns no CPU while it waits for the FIFO to refill."""
 
     def __init__(self, window_size: int = 32, num_streams: int = 4,
-                 jit_cache: Optional[Dict] = None):
-        super().__init__(window_size)
+                 jit_cache: Optional[Dict] = None,
+                 history_limit: Optional[int] = None):
+        super().__init__(window_size, history_limit=history_limit)
         self.num_streams = num_streams
         self.stats = ExecStats()
         self._jit_cache = jit_cache if jit_cache is not None else {}

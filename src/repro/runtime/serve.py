@@ -91,16 +91,21 @@ class _ServingCore:
     """Slots, kernels, and fair bounded admission — shared by both servers."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
-                 max_len: int = 64, max_queue: int = 256):
+                 max_len: int = 64, max_queue: int = 256,
+                 history_limit: Optional[int] = 1024):
         assert cfg.frontend is None, "serving driver uses token models"
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.max_queue = max_queue
+        self.history_limit = history_limit
         self.pool = BufferPool()
         self.queue: Deque[Request] = collections.deque()
         self.active: Dict[int, Request] = {}
-        self.report_log: List[Dict] = []
+        # Rolling report trace: a long-lived server's host memory must be
+        # flat, so monitoring state rotates instead of accumulating
+        # (asserted by benchmarks/bench_soak.py).
+        self.report_log: Deque[Dict] = collections.deque(maxlen=history_limit)
 
         # one opaque buffer per slot: value = (cache pytree, last_token, pos)
         self.slots = []
@@ -138,13 +143,24 @@ class _ServingCore:
     def submit(self, prompt: np.ndarray, max_new: int = 8,
                tenant: str = "default") -> Request:
         """Enqueue a request. Raises :class:`AdmissionQueueFull` when the
-        bounded FIFO is at capacity; otherwise stamps the observed queue
-        depth on the request (the producer-visible backpressure signal)."""
+        bounded FIFO is at capacity and :class:`ValueError` for requests
+        that can never be served (over-long prompt, negative ``max_new``);
+        otherwise stamps the observed queue depth on the request (the
+        producer-visible backpressure signal). ``max_new=0`` is valid and
+        means zero decode rounds: the request finishes with no generated
+        tokens once its prefill retires."""
         if len(self.queue) >= self.max_queue:
             raise AdmissionQueueFull(
                 f"admission queue at capacity ({self.max_queue}); retry later")
-        req = Request(prompt=np.asarray(prompt, np.int32), max_new=max_new,
-                      tenant=tenant)
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds the cache capacity "
+                f"(max_len - 1 = {self.max_len - 1}); truncate the prompt "
+                "or raise max_len")
+        if max_new < 0:
+            raise ValueError(f"max_new must be >= 0, got {max_new}")
+        req = Request(prompt=prompt, max_new=max_new, tenant=tenant)
         req.t_arrival = time.perf_counter()
         self.queue.append(req)
         req.queue_depth = len(self.queue)
@@ -174,10 +190,15 @@ class _ServingCore:
 
     def _grant_slot(self, req: Request):
         """Bind the request to a free slot and allocate its prompt buffer
-        (freed again when the prefill retires)."""
+        (freed again when the prefill retires). The slot value resets to
+        ``(cache, None, 0)`` so the previous occupant's leftover token/pos
+        can never be mistaken for this request's state (a stale token made
+        the batch server schedule a decode before the new prefill retired)."""
         req.slot = self.free.pop(0)
         req.t_admit = time.perf_counter()
         self.active[req.slot] = req
+        cache = self.slots[req.slot].value[0]
+        self.slots[req.slot].value = (cache, None, 0)
         tok_buf = self.pool.alloc(
             (1, len(req.prompt)), np.int32, name=f"req{req.rid}_prompt",
             value=jnp.asarray(req.prompt[None]),
@@ -232,9 +253,12 @@ class ContinuousBatchingServer(_ServingCore):
                 outputs=(self.slots[req.slot],),
             )
 
-        # decode wave over slots that already hold a token
+        # decode wave over slots that hold a token AND can still take a
+        # round (not done — max_new=0 finishes on prefill alone — and not
+        # at cache capacity)
         decoding = [s for s, r in self.active.items()
-                    if self.slots[s].value[1] is not None]
+                    if self.slots[s].value[1] is not None and not r.done
+                    and int(self.slots[s].value[2]) < self.max_len - 1]
         if decoding:
             bufs = tuple(self.slots[s] for s in decoding)
             self._decode_kernel.launch(stream, inputs=bufs, outputs=bufs)
@@ -256,6 +280,18 @@ class ContinuousBatchingServer(_ServingCore):
         for s in list(decoding):
             req = self._harvest_slot(s)
             if req is not None:
+                finished.append(req)
+        # zero-round finish: active slots whose prefill retired but which
+        # can never decode (max_new=0, or the prompt fills the cache) —
+        # finish with what they have instead of spinning forever
+        for s in list(self.active):
+            req = self.active[s]
+            _, tok, pos = self.slots[s].value
+            if tok is not None and (
+                    req.done or int(pos) >= self.max_len - 1):
+                req.t_finish = time.perf_counter()
+                del self.active[s]
+                self.free.append(s)
                 finished.append(req)
         return finished
 
@@ -292,53 +328,78 @@ class SessionServer(_ServingCore):
     admitted chains drain in whole-window epochs (slot values are opaque
     cache pytrees, so every serving kernel takes the session's in-epoch
     host path — the evidence here is the epoch/admission structure and the
-    per-epoch stats, not arena residency).
+    per-epoch stats, not arena residency). ``pool.free`` is wired into the
+    device session's row lifecycle: any array buffer a producer routes
+    through the arena (e.g. auxiliary device-lowerable streams submitted
+    alongside requests) has its row recycled when the buffer is freed.
     """
 
     SCHEDULERS = ("frontier", "wave", "device")
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 64, window: int = 32, max_queue: int = 256,
-                 scheduler: str = "frontier", max_inflight: int = 8):
+                 scheduler: str = "frontier", max_inflight: int = 8,
+                 history_limit: Optional[int] = 1024):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
-                         max_queue=max_queue)
+                         max_queue=max_queue, history_limit=history_limit)
         if scheduler == "frontier":
             from ..core.frontier import FrontierSession
 
             self.session = FrontierSession(window_size=window,
                                            max_inflight=max_inflight,
-                                           max_group=1)
+                                           max_group=1,
+                                           history_limit=history_limit)
         elif scheduler == "wave":
             from ..core.session import WaveSession
 
             self.session = WaveSession(window_size=window,
-                                       executor=SerialExecutor())
+                                       executor=SerialExecutor(),
+                                       history_limit=history_limit)
         elif scheduler == "device":
             from ..core.device_dispatch import DeviceSession
 
-            self.session = DeviceSession(window_size=window)
+            self.session = DeviceSession(window_size=window,
+                                         history_limit=history_limit)
+            # Row lifecycle wiring: freeing any pool buffer (per-request
+            # prompts, auxiliary workload buffers) releases its arena row
+            # for recycling — the device session's slabs stay bounded under
+            # unbounded request streams.
+            self.pool.add_free_hook(self.session.release_buffer)
         else:
             raise ValueError(
                 f"session server scheduler must be one of {self.SCHEDULERS}, "
                 f"got {scheduler!r}")
         self.scheduler_name = scheduler
         self._finished: List[Request] = []
-        # tid -> prefill | decode. A schedule trace like the session's
-        # ``waves``/``groups`` lists: report-lifetime state, so recycle the
-        # server session periodically under unbounded streams.
+        # tid -> prefill | decode for tasks currently IN FLIGHT; entries
+        # drop at retirement, so a long-lived server holds at most one
+        # window's worth (schedule-kind traces for finished work live in
+        # the rolling report_log, not here).
         self.task_kinds: Dict[int, str] = {}
-        self.occupancy_samples: List[int] = []
+        self.occupancy_samples: Deque[int] = collections.deque(
+            maxlen=history_limit)
 
     # -- retirement callbacks (fire inside session.poll/drive) --------------
-    def _on_decode_retired(self, slot: int, last: bool) -> None:
+    def _finish_slot(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        req.t_finish = time.perf_counter()
+        self.free.append(slot)
+        self._finished.append(req)
+
+    def _on_prefill_retired(self, task, buf_name: str, slot: int,
+                            finish: bool) -> None:
+        self.pool.free(buf_name)  # no leak
+        self.task_kinds.pop(task.tid, None)
+        if finish:  # zero decode rounds: the prefill IS the whole program
+            self._finish_slot(slot)
+
+    def _on_decode_retired(self, task, slot: int, last: bool) -> None:
+        self.task_kinds.pop(task.tid, None)
         req = self.active[slot]
         _, tok, _ = self.slots[slot].value
         req.generated.append(int(np.asarray(tok)[0]))
         if last:
-            req.t_finish = time.perf_counter()
-            del self.active[slot]
-            self.free.append(slot)
-            self._finished.append(req)
+            self._finish_slot(slot)
 
     # -- service loop --------------------------------------------------------
     def _admit(self, req: Request) -> None:
@@ -358,16 +419,21 @@ class SessionServer(_ServingCore):
         task = self._prefill_kernel.launch(
             stream, inputs=(self.slots[s], tok_buf), outputs=(self.slots[s],))
         self.task_kinds[task.tid] = "prefill"
+        # Decode rounds the cache can actually hold: zero when max_new=0 or
+        # the prompt already fills it — never force a phantom round that
+        # would advance pos past max_len (the old max(1, ...) clamp).
+        rounds = min(req.max_new, self.max_len - 1 - len(req.prompt))
         self.session.on_task_retired(
-            task, lambda _t, n=tok_buf.name: self.pool.free(n))  # no leak
-        rounds = max(1, min(req.max_new, self.max_len - 1 - len(req.prompt)))
+            task, lambda t, n=tok_buf.name, s=s, fin=(rounds == 0):
+            self._on_prefill_retired(t, n, s, fin))
         bufs = (self.slots[s],)
         for k in range(rounds):
             dtask = self._decode_kernel.launch(stream, inputs=bufs, outputs=bufs)
             self.task_kinds[dtask.tid] = "decode"
             self.session.on_task_retired(
                 dtask,
-                lambda _t, s=s, last=(k == rounds - 1): self._on_decode_retired(s, last))
+                lambda t, s=s, last=(k == rounds - 1):
+                self._on_decode_retired(t, s, last))
 
     def pump(self) -> List[Request]:
         """One non-blocking service iteration; returns newly finished

@@ -311,3 +311,189 @@ class TestMultiOutputAndArity:
         DeviceWindowRunner().run(t_dev)
         np.testing.assert_array_equal(np.asarray(out_dev.value),
                                       np.asarray(out_ref.value))
+
+
+# ---------------------------------------------------------------------------
+# Row lifecycle: free / recycle / compact (DESIGN §2 A3 gap (2))
+# ---------------------------------------------------------------------------
+
+class TestRowLifecycle:
+    def _mk(self, pool, n, shape=(6,), dtype=np.float32, base=0.0):
+        return [pool.alloc(shape, dtype,
+                           value=jnp.full(shape, base + i, dtype=dtype))
+                for i in range(n)]
+
+    def test_free_then_add_recycles_the_row(self):
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8)
+        a, b = self._mk(pool, 2)
+        addr_a = arena.add(a)
+        arena.add(b)
+        assert arena.free(a) and a not in arena
+        c = pool.alloc((6,), np.float32, value=jnp.zeros(6))
+        assert arena.add(c) == addr_a  # reuse, not growth
+        assert arena.recycled_rows == 1 and arena.freed_rows == 1
+        assert len(arena.rows(0)) == 2  # slab never grew
+
+    def test_free_unknown_buffer_is_noop(self):
+        pool = BufferPool()
+        arena = SlabArena()
+        assert arena.free(pool.alloc((4,), np.float32, value=jnp.zeros(4))) is False
+        assert arena.freed_rows == 0
+
+    def test_recycled_packed_row_refreshed_on_pack_incremental(self):
+        """A recycled row below the watermark holds the dead occupant's
+        device bits; the next incremental pack must rewrite it from the new
+        buffer's host value."""
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8)
+        a, b = self._mk(pool, 2)
+        arena.add(a), arena.add(b)
+        slabs = arena.pack()
+        arena.free(a)
+        c = pool.alloc((6,), np.float32, value=jnp.full(6, 42.0))
+        cid, row = arena.add(c)
+        slabs = arena.pack_incremental(slabs)
+        assert slabs[cid].shape[0] == 2
+        np.testing.assert_array_equal(np.asarray(slabs[cid][row][:6]),
+                                      np.full(6, 42.0, np.float32))
+
+    def test_full_pack_zeroes_dead_rows_and_unpack_skips_them(self):
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8)
+        bufs = self._mk(pool, 3)
+        for b in bufs:
+            arena.add(b)
+        arena.free(bufs[1])
+        slabs = arena.pack()
+        np.testing.assert_array_equal(np.asarray(slabs[0][1]), np.zeros(8))
+        arena.unpack(slabs)  # must not touch the dead row's old buffer
+        np.testing.assert_array_equal(np.asarray(bufs[1].value),
+                                      np.full(6, 1.0, np.float32))
+
+    def test_unpack_only_is_addressed_not_scanned(self):
+        """unpack(only=...) resolves through the address map: exactly
+        |only| rows written, released buffers silently skipped."""
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8)
+        bufs = self._mk(pool, 4)
+        for b in bufs:
+            arena.add(b)
+        slabs = arena.pack()
+        arena.free(bufs[3])
+        arena.unpack(slabs, only=[bufs[2], bufs[3]])
+        assert arena.unpack_rows_written == 1  # bufs[3] released -> skipped
+
+    def test_needs_compaction_threshold(self):
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8, compact_waste=0.5,
+                          compact_min_rows=4)
+        bufs = self._mk(pool, 4)
+        for b in bufs:
+            arena.add(b)
+        arena.free(bufs[0])
+        assert arena.needs_compaction() == []  # 1/4 < 0.5
+        arena.free(bufs[1])
+        assert arena.needs_compaction() == [0]  # 2/4 >= 0.5
+        small = SlabArena(compact_min_rows=8)
+        b = pool.alloc((6,), np.float32, value=jnp.zeros(6))
+        small.add(b)
+        small.free(b)
+        assert small.needs_compaction() == []  # under min_rows floor
+
+    def test_compact_gathers_device_values_and_remaps(self):
+        """Compaction drops dead rows from the materialized slab WITHOUT a
+        host round-trip, remaps surviving addresses densely in old order,
+        and bumps the class generation."""
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8, compact_min_rows=2)
+        bufs = self._mk(pool, 6)
+        for b in bufs:
+            arena.add(b)
+        slabs = arena.pack()
+        # poison host values: post-compaction unpack must read DEVICE rows
+        for b in bufs:
+            b.value = jnp.full(6, -99.0)
+        for i in (0, 2, 4):
+            arena.free(bufs[i])
+        assert arena.needs_compaction() == [0]
+        slabs, moved = arena.compact(slabs)
+        assert moved == {0: {1: 0, 3: 1, 5: 2}}
+        assert arena.generation == 1 and arena.class_generation(0) == 1
+        assert arena.compactions == 1
+        assert slabs[0].shape[0] == 3 and len(arena.rows(0)) == 3
+        assert arena.free_rows() == 0
+        for b in (bufs[1], bufs[3], bufs[5]):
+            cid, row = arena.add(b)  # idempotent lookup of the new address
+            np.testing.assert_array_equal(
+                np.asarray(slabs[cid][row][:6]),
+                np.full(6, float(bufs.index(b)), np.float32))
+
+    def test_compact_keeps_unpacked_tail_on_host(self):
+        """Rows beyond the watermark were never materialized: compaction
+        must not invent device values for them — the next incremental pack
+        appends them from host as usual."""
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8, compact_min_rows=2)
+        a, b = self._mk(pool, 2)
+        arena.add(a), arena.add(b)
+        slabs = arena.pack()  # watermark = 2
+        arena.free(a)
+        tail = pool.alloc((6,), np.float32, value=jnp.full(6, 7.0))
+        # recycles a's row -> no unpacked tail yet; free b to force waste
+        arena.add(tail)
+        arena.free(b)
+        c = self._mk(pool, 1, base=30.0)[0]
+        arena.add(c)
+        d = self._mk(pool, 1, base=40.0)[0]
+        arena.add(d)  # grows: row 2, beyond current watermark
+        slabs = arena.pack_incremental(slabs)  # watermark = 3
+        arena.free(c)
+        arena.free(tail)
+        slabs, moved = arena.compact(slabs)
+        slabs = arena.pack_incremental(slabs)
+        arena.unpack(slabs)
+        np.testing.assert_array_equal(np.asarray(d.value), np.full(6, 40.0))
+
+    @given(st.lists(st.integers(0, 2), min_size=1, max_size=60),
+           st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_lifecycle_never_aliases_live_rows(self, ops, seed):
+        """Property: under any add/free/compact interleaving, live buffers
+        occupy distinct rows, free-list rows are exactly the dead ones, and
+        packed slabs always reproduce every live host value."""
+        rng = np.random.RandomState(seed)
+        pool = BufferPool()
+        arena = SlabArena(pad_multiple=8, compact_min_rows=2)
+        live = []
+        expected = {}
+        slabs = None
+        counter = [0]
+        for op in ops:
+            if op == 0 or not live:  # add
+                counter[0] += 1
+                b = pool.alloc((5,), np.float32,
+                               value=jnp.full(5, float(counter[0])))
+                arena.add(b)
+                live.append(b)
+                expected[id(b)] = float(counter[0])
+            elif op == 1:  # free a random live buffer
+                b = live.pop(rng.randint(len(live)))
+                assert arena.free(b)
+            else:  # compact (threshold-driven)
+                slabs, _ = arena.compact(slabs)
+            if rng.rand() < 0.4:
+                slabs = arena.pack_incremental(slabs)
+        # no aliasing: every live buffer has a unique address
+        addrs = [arena.add(b) for b in live]
+        assert len(set(addrs)) == len(addrs)
+        # free-list accounting
+        assert arena.live_rows() == len(live)
+        assert arena.live_rows() + arena.free_rows() == \
+            sum(len(arena.rows(c)) for c in range(arena.n_classes()))
+        # every live value survives the round trip
+        slabs = arena.pack_incremental(slabs)
+        arena.unpack(slabs)
+        for b in live:
+            np.testing.assert_array_equal(
+                np.asarray(b.value), np.full(5, expected[id(b)], np.float32))

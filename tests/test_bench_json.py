@@ -167,3 +167,54 @@ def test_smoke_json_artifact_w256_leg(tmp_path):
     payload = json.loads(path.read_text())
     _validate_schema(payload, expect_sections=_emitted_names(sections))
     assert payload["flags"]["window"] == "256"
+
+
+# The lifetime gates the soak section must hold (1 = pass); asserted both
+# on the committed artifact and on the live slow-lane run.
+SOAK_GATES = ("slab_flat", "plan_cache_bounded", "rows_recycled", "compacted",
+              "rss_bounded", "p95_stable", "bookkeeping_bounded",
+              "matches_serial", "counterfactual_grows")
+
+
+def _assert_soak_gates(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    for gate in SOAK_GATES:
+        assert metrics.get(("soak", gate)) == 1, (
+            f"soak gate {gate!r} failed: "
+            f"{ {m: v for (s, m), v in metrics.items() if s == 'soak'} }")
+    # the artifact carries the evidence, not just the verdicts
+    assert ("soak", "slab_bytes_per_phase") in metrics
+    assert ("soak", "counterfactual_slab_bytes_per_phase") in metrics
+    assert metrics[("soak", "arena_recycled_rows")] > 0
+    assert metrics[("soak", "arena_compactions")] >= 1
+
+
+def test_committed_bench_soak_json():
+    """The repo-root BENCH_soak.json (regenerated by the CI soak step) must
+    stay schema-valid with every lifetime gate green — committing an
+    artifact with a failed gate is committing a known leak."""
+    path = os.path.join(REPO_ROOT, "BENCH_soak.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=["soak"])
+    assert payload["sections"] == ["soak"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_soak_gates(payload)
+
+
+@pytest.mark.slow  # runs the real soak smoke leg (~30s)
+def test_smoke_soak_json_artifact_real(tmp_path):
+    """End-to-end: the exact CI soak command must produce a schema-valid
+    artifact with every lifetime gate green on THIS host."""
+    path = tmp_path / "bench-soak.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke", "soak",
+         f"--json={path}"],
+        cwd=REPO_ROOT, env=_bench_env(), capture_output=True, text=True,
+        timeout=270,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(path.read_text())
+    _validate_schema(payload, expect_sections=["soak"])
+    _assert_soak_gates(payload)

@@ -85,6 +85,11 @@ class TestSessionServer:
         decode (wave) — admission into the LIVE window, not a fresh drain."""
         server = SessionServer(tiny_cfg, tiny_params, max_slots=2, max_len=32,
                                scheduler="wave")
+        # task_kinds drops entries at retirement (bounded bookkeeping), so
+        # record each retired task's kind through the session listener
+        kinds = {}
+        server.session.add_retire_listener(
+            lambda t: kinds.__setitem__(t.tid, t.opcode))
         prompts = _prompts(tiny_cfg, 2, seed=2)
         server.submit(prompts[0], max_new=4)
         for _ in range(3):
@@ -93,8 +98,9 @@ class TestSessionServer:
         server.run_until_drained()
         report = server.close()
         mixed = [w for w in report.waves
-                 if len({server.task_kinds[t] for t in w}) > 1]
+                 if len({kinds[t] for t in w}) > 1]
         assert mixed, "no wave co-scheduled a prefill with the in-flight decode"
+        assert not server.task_kinds, "task_kinds must drain with retirements"
 
     def test_frontier_overlaps_groups(self, tiny_cfg, tiny_params):
         server = SessionServer(tiny_cfg, tiny_params, max_slots=2, max_len=32,
@@ -155,3 +161,122 @@ class TestBatchServerSatellites:
         server.submit(_prompts(tiny_cfg, 1)[0])
         with pytest.raises(AdmissionQueueFull):
             server.submit(_prompts(tiny_cfg, 1, seed=8)[0])
+
+
+class TestLifetimeRegressions:
+    """ISSUE 6 satellites: round clamping, stale-slot reuse, bounded
+    bookkeeping, and the device arena row lifecycle wiring."""
+
+    @pytest.mark.parametrize("server_cls", [SessionServer,
+                                            ContinuousBatchingServer])
+    def test_overlong_prompt_rejected_at_submit(self, tiny_cfg, tiny_params,
+                                                server_cls):
+        server = server_cls(tiny_cfg, tiny_params, max_slots=1, max_len=8)
+        with pytest.raises(ValueError, match="prompt length"):
+            server.submit(np.zeros(8, np.int32))  # max_len - 1 = 7
+        server.submit(np.zeros(7, np.int32))  # exactly full cache: accepted
+
+    @pytest.mark.parametrize("server_cls", [SessionServer,
+                                            ContinuousBatchingServer])
+    def test_negative_max_new_rejected(self, tiny_cfg, tiny_params,
+                                       server_cls):
+        server = server_cls(tiny_cfg, tiny_params, max_slots=1, max_len=8)
+        with pytest.raises(ValueError, match="max_new"):
+            server.submit(np.zeros(3, np.int32), max_new=-1)
+
+    def test_max_new_zero_means_zero_rounds_session(self, tiny_cfg,
+                                                    tiny_params):
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=2, max_len=32)
+        req = server.submit(_prompts(tiny_cfg, 1)[0], max_new=0)
+        done = server.run_until_drained()
+        server.close()
+        assert [r.rid for r in done] == [req.rid]
+        assert req.generated == []
+        assert req.t_finish >= req.t_admit
+        assert _no_prompt_buffers(server.pool)
+
+    def test_full_prompt_gets_zero_rounds_session(self, tiny_cfg,
+                                                  tiny_params):
+        """A prompt filling the cache (len == max_len - 1) must NOT get the
+        old forced decode round that pushed pos past max_len."""
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=1, max_len=8)
+        req = server.submit(np.zeros(7, np.int32), max_new=5)
+        server.run_until_drained()
+        server.close()
+        assert req.generated == []
+        assert int(server.slots[0].value[2]) == 7  # pos never passed max_len-1
+
+    def test_max_new_zero_means_zero_rounds_batch(self, tiny_cfg,
+                                                  tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params, max_slots=2,
+                                          max_len=32)
+        req = server.submit(_prompts(tiny_cfg, 1)[0], max_new=0)
+        done = server.run_until_drained()
+        assert [r.rid for r in done] == [req.rid]
+        assert req.generated == []
+        assert not server.active and len(server.free) == 2
+
+    def test_stale_slot_not_decoded_before_prefill(self, tiny_cfg,
+                                                   tiny_params):
+        """Regression: a freed slot kept its last occupant's (token, pos);
+        re-granting it made the batch server schedule a decode against the
+        stale token in the same step as the new prefill. After the reset,
+        the admission step runs exactly the prefill."""
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params, max_slots=1,
+                                          max_len=32)
+        prompts = _prompts(tiny_cfg, 2, seed=8)
+        server.submit(prompts[0], max_new=1)
+        server.run_until_drained()  # request 0 done; slot 0 holds stale state
+        req1 = server.submit(prompts[1], max_new=2)
+        server.step()  # admission step for request 1
+        assert server.report_log[-1]["tasks_this_run"] == 1  # prefill ONLY
+        assert req1.generated == []  # nothing harvested from stale state
+        server.run_until_drained()
+        assert len(req1.generated) == 2
+
+    def test_bookkeeping_is_bounded(self, tiny_cfg, tiny_params):
+        """task_kinds drains with retirements; occupancy samples and the
+        report log rotate at history_limit."""
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=2, max_len=32,
+                               history_limit=4)
+        for p in _prompts(tiny_cfg, 6, seed=10):
+            server.submit(p, max_new=2)
+        server.run_until_drained()
+        server.close()
+        assert server.task_kinds == {}
+        assert len(server.occupancy_samples) <= 4
+        assert len(server.report_log) <= 4
+        assert server.occupancy_samples.maxlen == 4
+        assert len(server.session.waves) <= 4
+
+    def test_device_server_recycles_aux_rows_via_pool_free(self, tiny_cfg,
+                                                           tiny_params):
+        """pool.free on a device-server buffer releases its arena row (the
+        free-hook wiring): recurring aux traffic reuses one bounded row
+        set instead of leaking a row per buffer."""
+        import jax.numpy as jnp
+
+        from repro.core import Task
+        from repro.core.task import default_segments
+
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=1, max_len=16,
+                               scheduler="device")
+        rows_after = []
+        for wave in range(4):
+            bufs = [server.pool.alloc((4,), np.float32,
+                                      name=f"aux{wave}_{i}",
+                                      value=jnp.full(4, float(i + 1)))
+                    for i in range(3)]
+            r, w = default_segments((bufs[0], bufs[1]), (bufs[2],))
+            server.session.submit(
+                Task(opcode="aux_axpy", fn=lambda x, y: x + 2.0 * y,
+                     inputs=(bufs[0], bufs[1]), outputs=(bufs[2],),
+                     read_segments=r, write_segments=w))
+            server.session.flush()
+            for b in bufs:
+                server.pool.free(b.name)
+            rows_after.append(server.session.arena.live_rows()
+                              + server.session.arena.free_rows())
+        assert rows_after[-1] == rows_after[0]  # flat, not 3 rows/wave
+        assert server.session.arena.recycled_rows > 0
+        server.close()

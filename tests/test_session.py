@@ -345,3 +345,208 @@ class TestBufferPoolFree:
         assert b.base > a.base  # bump pointer stays monotone
         with pytest.raises(KeyError):
             pool.free("never-allocated")
+
+    def test_free_hooks_fire_with_the_buffer(self):
+        pool = BufferPool()
+        seen = []
+        pool.add_free_hook(seen.append)
+        b = pool.alloc((D,), np.float32, name="hooked", value=jnp.ones(D))
+        pool.free("hooked")
+        assert seen == [b]
+
+
+class TestHistoryLimit:
+    """Bounded session-lifetime bookkeeping (history_limit=N): schedule
+    traces rotate, yet retirement observation stays exact for every tid
+    ever retired."""
+
+    def test_traces_rotate_but_counters_stay_exact(self):
+        _, buffers, tasks = build_stream(11, 30, 6)
+        s = make_session("wave", window_size=4, history_limit=5)
+        for t in tasks:
+            s.submit(t)
+            s.poll()
+        report = s.close()
+        assert len(s.waves) <= 5
+        assert report.window_stats["retired"] == 30
+        np.testing.assert_allclose(final_values(buffers), serial_ref(11),
+                                   rtol=1e-6)
+
+    def test_fire_immediately_survives_tid_eviction(self):
+        """A callback/ticket registered long after retirement must still
+        fire immediately even when the tid was rotated out of the live
+        retired set into the evicted intervals."""
+        _, _, tasks = build_stream(12, 40, 6)
+        s = make_session("wave", window_size=4, history_limit=4)
+        for t in tasks:
+            s.submit(t)
+            s.poll()
+        assert len(s._retired_tids) <= 4  # rotated
+        fired = []
+        s.on_task_retired(tasks[0], lambda t: fired.append(t.tid))
+        assert fired == [tasks[0].tid]
+        assert s.ticket(tasks[0]).done()
+        for t in tasks:  # exact membership for every tid ever retired
+            assert s._is_retired(t.tid)
+        unseen = Task(opcode="axpy", fn=_axpy, inputs=(), outputs=(),
+                      read_segments=(), write_segments=())
+        assert not s._is_retired(unseen.tid)
+        s.close()
+
+    def test_evicted_intervals_stay_merged(self):
+        """Monotone tid eviction collapses into O(1) intervals, not one
+        entry per evicted tid."""
+        _, _, tasks = build_stream(13, 50, 6)
+        s = make_session("wave", window_size=4, history_limit=4)
+        for t in tasks:
+            s.submit(t)
+            s.poll()
+        assert len(s._retired_evicted) <= 2
+        s.close()
+
+    def test_rejects_nonpositive_limit(self):
+        with pytest.raises(ValueError, match="history_limit"):
+            make_session("wave", history_limit=0)
+
+    def test_device_session_epoch_log_rotates(self):
+        s = make_session("device", window_size=4, history_limit=3)
+        for seed in range(5):
+            _, _, tasks = build_stream(seed, 4, 3)
+            s.submit(tasks)
+            s.poll()
+        assert len(s.epoch_log) <= 3
+        assert s.session_stats()["epochs"] == 5
+        s.close()
+
+
+class TestDeviceSessionRecycling:
+    """Arena row lifecycle through the live device session: release feeds
+    the free-list, recurring traffic recycles rows (bounded slabs, plan
+    cache hits stay valid), and compaction invalidates exactly the moved
+    structure keys."""
+
+    def _phase(self, session, pool, n=4, value=1.0):
+        """One request-like burst: fresh buffers, a 2-task chain, flush to
+        retire; returns the buffers (caller releases them)."""
+        bufs = [pool.alloc((D,), np.float32, value=jnp.full(D, value + i))
+                for i in range(n)]
+        chain = []
+        for src, dst in ((0, 2), (2, 3)):
+            r, w = default_segments((bufs[src], bufs[1]), (bufs[dst],))
+            chain.append(Task(opcode="axpy", fn=_axpy,
+                              inputs=(bufs[src], bufs[1]),
+                              outputs=(bufs[dst],),
+                              read_segments=r, write_segments=w))
+        session.submit(chain)
+        session.flush()
+        return bufs
+
+    def test_release_bounds_rows_and_cache_under_recurring_traffic(self):
+        from repro.core import DeviceSession
+
+        s = DeviceSession(window_size=8)
+        pool = BufferPool()
+        rows_after = []
+        for phase in range(8):
+            bufs = self._phase(s, pool, value=float(phase))
+            for b in bufs:
+                assert s.release_buffer(b)
+            rows_after.append(sum(len(s.arena.rows(c))
+                                  for c in range(s.arena.n_classes())))
+        stats = s.session_stats()
+        # slab never grows past the first phase's footprint
+        assert rows_after[-1] == rows_after[0]
+        assert stats["arena_recycled_rows"] > 0
+        assert stats["slab_bytes"] == rows_after[0] * 8 * 4  # padded rows
+        # recycled rows repeat structure keys: the cache stays bounded and
+        # hot instead of growing one entry per phase
+        assert stats["plan_cache_entries"] <= 2
+        assert stats["plan_cache_hits"] >= 5
+        s.close()
+
+    def test_without_release_rows_grow_monotonically(self):
+        """The pre-fix behavior, kept as the contrast leg: no release, one
+        leaked row per buffer per phase."""
+        from repro.core import DeviceSession
+
+        s = DeviceSession(window_size=8)
+        pool = BufferPool()
+        for phase in range(4):
+            self._phase(s, pool, value=float(phase))
+        assert s.arena.live_rows() == 4 * 4
+        assert s.session_stats()["plan_cache_entries"] == 4
+        s.close()
+
+    def test_compaction_invalidates_exactly_moved_classes(self):
+        """Two shape classes; compacting one must drop only ITS cached
+        plans — the other class's entry survives and keeps hitting — and
+        surviving values stay bit-exact (device-side gather)."""
+        from repro.core import DeviceSession
+
+        s = DeviceSession(window_size=8, compact_min_rows=8,
+                          compact_waste=0.5)
+        pool = BufferPool()
+        # class A: (D,) rows
+        a = [pool.alloc((D,), np.float32, value=jnp.full(D, 1.0 + i))
+             for i in range(8)]
+        # class B: (2, D) rows — a distinct padded shape class
+        b = [pool.alloc((2, D), np.float32, value=jnp.full((2, D), 50.0 + i))
+             for i in range(2)]
+
+        def task_over(ins, outs):
+            r, w = default_segments(ins, outs)
+            return Task(opcode="axpy", fn=_axpy, inputs=ins, outputs=outs,
+                        read_segments=r, write_segments=w)
+
+        # epoch 1: class-A-only plan touching all 8 A rows (pairwise)
+        s.submit([task_over((a[i], a[i + 1]), (a[i + 1],))
+                  for i in range(0, 8, 2)])
+        s.flush()
+        s.submit(task_over((b[0], b[1]), (b[1],)))
+        s.flush()  # epoch 2: class-B-only plan
+        keys_before = set(s._plan_cache.keys())
+        assert len(keys_before) == 2
+        # kill 6 of 8 class-A rows -> waste 6/8 >= 0.5; class B untouched
+        for buf in a[2:]:
+            assert s.release_buffer(buf)
+        # next epoch compacts class A first, then executes
+        s.submit(task_over((b[0], b[1]), (b[1],)))  # same B structure
+        s.flush()
+        stats = s.session_stats()
+        assert stats["arena_compactions"] == 1
+        assert stats["arena_generation"] == 1
+        assert stats["plan_cache_invalidations"] == 1  # the class-A entry
+        surviving = keys_before & set(s._plan_cache.keys())
+        assert len(surviving) == 1  # class-B entry survived...
+        assert stats["plan_cache_hits"] >= 1  # ...and kept hitting
+        # values across the compaction stay bit-exact
+        s.sync()
+        np.testing.assert_array_equal(
+            np.asarray(a[1].value),
+            np.asarray(_axpy(jnp.full(D, 1.0), jnp.full(D, 2.0))))
+        expected_b1 = _axpy(jnp.full((2, D), 50.0),
+                            _axpy(jnp.full((2, D), 50.0),
+                                  jnp.full((2, D), 51.0)))
+        np.testing.assert_array_equal(np.asarray(b[1].value),
+                                      np.asarray(expected_b1))
+        s.close()
+
+    def test_plan_cache_lru_cap(self):
+        from repro.core import DeviceSession
+
+        s = DeviceSession(window_size=8, plan_cache_limit=2)
+        pool = BufferPool()
+        bufs = [pool.alloc((D,), np.float32, value=jnp.ones(D))
+                for _ in range(6)]
+        # three structurally distinct single-task epochs
+        for ins, outs in (((bufs[0], bufs[1]), (bufs[1],)),
+                          ((bufs[2], bufs[3]), (bufs[3],)),
+                          ((bufs[4], bufs[5]), (bufs[5],))):
+            r, w = default_segments(ins, outs)
+            s.submit(Task(opcode="axpy", fn=_axpy, inputs=ins, outputs=outs,
+                          read_segments=r, write_segments=w))
+            s.poll()
+        stats = s.session_stats()
+        assert stats["plan_cache_entries"] == 2
+        assert stats["plan_cache_evictions"] == 1
+        s.close()
