@@ -7,8 +7,9 @@ same axis as the host schedulers:
 
 * **policies**: serial (one dispatch per kernel), threaded (paper ACS-SW:
   K streams, per-kernel sync), frontier (async group retirement), and the
-  device runner in both plan modes (wave / frontier lowering; ONE dispatch
-  per stream).
+  device runner in all three plan modes (wave / frontier step-table
+  lowering, and the ``loop`` ready-queue program that advances the whole
+  dependency frontier inside ONE ``lax.while_loop`` dispatch).
 * **columns**: wall seconds + speedup vs serial, dispatch count (the
   §II-D communication-overhead axis), active fraction (host: wave-width
   occupancy proxy; device: plan table density), and — device only — the
@@ -30,7 +31,12 @@ persistent :class:`DeviceSession` (streams accumulate in the rolling
 window; recurring slices hit the session's structure-keyed plan cache and
 whole backlogs drain in one epoch dispatch). Columns: dispatches,
 plan-cache hits, host syncs — the host-round-trip reduction the
-persistent window buys.
+persistent window buys. A fourth leg serves the same workload through
+``plan_mode="loop"`` (gate: host syncs stay O(1) for the whole recurring
+workload, not per kernel), and the ``device_loop_pallas`` section forces
+the ready-queue Pallas kernel (interpret mode off-TPU) on the
+single-class chain universe and checks it bit-identical to both the
+interpreter lowering and the serial baseline.
 """
 
 from __future__ import annotations
@@ -48,11 +54,12 @@ from repro.core import (
     run_serial,
 )
 from repro.core.task import default_segments
+from repro.kernels.ops import LOOP_BRANCHES, register_loop_branches
 
 from .common import chosen_policies, emit, make_scheduler, opt, smoke
 
 HOST_POLICIES = ("serial", "threaded", "frontier")
-DEVICE_MODES = ("wave", "frontier")
+DEVICE_MODES = ("wave", "frontier", "loop")
 
 
 def _sim_leg():
@@ -134,6 +141,7 @@ def compare(name: str, build) -> None:
 
     if "device" not in chosen_policies(("device",)):
         return
+    walls = {}
     for mode in DEVICE_MODES:
         runner = DeviceWindowRunner(window_size=window, plan_mode=mode)
         _, warm_tasks = build()
@@ -142,6 +150,7 @@ def compare(name: str, build) -> None:
         t0 = time.perf_counter()
         report = runner.run(tasks)
         wall = time.perf_counter() - t0
+        walls[mode] = wall
         pol = f"device_{mode}"
         emit(name, f"{pol}_wall_s", round(wall, 4))
         emit(name, f"{pol}_speedup", round(base / wall, 3))
@@ -151,22 +160,27 @@ def compare(name: str, build) -> None:
         emit(name, f"{pol}_plan_steps", report.arena_stats["device_steps"])
         emit(name, f"{pol}_shape_classes", report.arena_stats["n_classes"])
         emit(name, f"{pol}_padding_waste", report.arena_stats["total_waste_frac"])
+        if mode == "loop":
+            emit(name, f"{pol}_executor", report.loop_executor)
         if mode == DEVICE_MODES[0]:  # arena layout is plan-mode independent
             for label, entry in sorted(report.arena_stats["per_class"].items()):
                 emit(name, f"waste_{label.replace(',', ';').replace(' ', '')}",
                      entry["waste_frac"])
+    if "wave" in walls and "loop" in walls and walls["loop"] > 0:
+        # > 1.0 means the ready-queue program beat the step-table lowering
+        # (informational ratio, no hard gate: both are one-dispatch paths).
+        emit(name, "loop_vs_wave", round(walls["wave"] / walls["loop"], 3))
 
 
 # ---------------------------------------------------------------------------
 # Persistent window: recurring-structure multi-stream leg
 # ---------------------------------------------------------------------------
 
-def _axpy(x, y):
-    return 1.5 * x + y + 1.0
-
-
-def _mul(x, y):
-    return x * y - 0.5
+# The shared ready-queue switch-branch fns (kernels/ops.py): using the
+# SAME objects the registry's switch table holds is what makes the chain
+# universe eligible for the Pallas fast path (identity-checked lowering).
+_axpy = LOOP_BRANCHES["axpy"]
+_mul = LOOP_BRANCHES["mul"]
 
 
 def _chain_universe(seed=0, n_chains=6, width=16):
@@ -271,12 +285,87 @@ def session_compare() -> None:
     emit(name, "session_fewer_dispatches_than_per_stream",
          int(stats["device_dispatches"] < dispatches))
 
+    # same workload through the ready-queue epoch executor: every epoch is
+    # one while_loop dispatch, and NOTHING in the recurring stream forces a
+    # host round-trip — host_syncs stays O(1) for the whole workload (the
+    # single close() read-back), not per stream or per kernel.
+    states, weight = _chain_universe(n_chains=n_chains)
+    ls = make_session("device", window_size=window, plan_mode="loop")
+    t0 = time.perf_counter()
+    for k in range(n_streams):
+        ls.submit(_emit_chain_stream(states, weight))
+        if k < 2:
+            ls.poll()
+    lreport = ls.close()
+    lstats = lreport.session_stats
+    emit(name, "loop_session_wall_s", round(time.perf_counter() - t0, 4))
+    emit(name, "loop_session_epochs", lstats["epochs"])
+    emit(name, "loop_session_dispatches", lstats["device_dispatches"])
+    emit(name, "loop_session_loop_dispatches", lstats["loop_dispatches"])
+    emit(name, "loop_session_plan_cache_hits", lstats["plan_cache_hits"])
+    emit(name, "loop_session_host_syncs", lstats["host_syncs"])
+    emit(name, "loop_session_host_syncs_d2h", lstats["host_syncs_d2h"])
+    emit(name, "loop_session_host_syncs_h2d", lstats["host_syncs_h2d"])
+    emit(name, "loop_session_host_syncs_O1", int(lstats["host_syncs"] <= 2))
+    emit(name, "loop_session_matches_serial",
+         int(np.array_equal(snap(states), ref)))
+
+
+# ---------------------------------------------------------------------------
+# Ready-queue Pallas fast path (forced; interpret mode off-TPU)
+# ---------------------------------------------------------------------------
+
+def pallas_loop_leg() -> None:
+    """Single-class chain universe through the forced-Pallas ready queue:
+    checks the on-device ``lax.switch`` kernel table produces the same
+    bits as the while_loop interpreter AND the serial baseline."""
+    name = "device_loop_pallas"
+    window = opt("window", 32)
+    n_chains = 4 if smoke() else 6
+
+    def snap(states):
+        return np.stack([np.asarray(s.value) for s in states])
+
+    states, weight = _chain_universe(n_chains=n_chains)
+    run_serial(_emit_chain_stream(states, weight))
+    ref = snap(states)
+
+    # interpreter lowering (loop_pallas=False)
+    states, weight = _chain_universe(n_chains=n_chains)
+    interp = DeviceWindowRunner(window_size=window, plan_mode="loop",
+                                loop_pallas=False)
+    ireport = interp.run(_emit_chain_stream(states, weight))
+    interp_snap = snap(states)
+    emit(name, "interpreter_executor", ireport.loop_executor)
+    emit(name, "interpreter_matches_serial",
+         int(np.array_equal(interp_snap, ref)))
+
+    # forced Pallas (interpret mode off-TPU); branch fns must be admitted
+    # to the registry switch table for the lowering to take the fast path.
+    states, weight = _chain_universe(n_chains=n_chains)
+    runner = DeviceWindowRunner(window_size=window, plan_mode="loop",
+                                loop_pallas=True)
+    register_loop_branches(runner.registry)
+    runner.run(_emit_chain_stream(states, weight))  # warm compile
+    states, weight = _chain_universe(n_chains=n_chains)
+    t0 = time.perf_counter()
+    preport = runner.run(_emit_chain_stream(states, weight))
+    emit(name, "pallas_wall_s", round(time.perf_counter() - t0, 4))
+    emit(name, "pallas_executor", preport.loop_executor)
+    emit(name, "pallas_used", int(preport.loop_executor == "pallas"))
+    emit(name, "pallas_dispatches", preport.exec_stats["dispatches"])
+    pallas_snap = snap(states)
+    emit(name, "pallas_matches_serial", int(np.array_equal(pallas_snap, ref)))
+    emit(name, "pallas_matches_interpreter",
+         int(np.array_equal(pallas_snap, interp_snap)))
+
 
 def main() -> None:
     for name, build in (_sim_leg(), _dyn_leg()):
         compare(name, build)
     if "device" in chosen_policies(("device",)):
         session_compare()
+        pallas_loop_leg()
 
 
 if __name__ == "__main__":

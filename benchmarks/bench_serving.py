@@ -203,7 +203,16 @@ def main() -> None:
     device_server.close()
     dstats = device_server.report_log[-1]["device_session"]
     emit("serving", "session_device_epochs", dstats["epochs"])
+    emit("serving", "session_device_plan_mode", dstats["plan_mode"])
     emit("serving", "session_device_host_syncs", dstats["host_syncs"])
+    # audited split (DESIGN §2 A3): every host<->device transition is
+    # attributed to a direction and to the stream tag that forced it, so
+    # "who is making us sync" reads straight off the bench output.
+    emit("serving", "session_device_host_syncs_d2h", dstats["host_syncs_d2h"])
+    emit("serving", "session_device_host_syncs_h2d", dstats["host_syncs_h2d"])
+    for tag in sorted(dstats["host_syncs_by_tag"]):
+        emit("serving", f"session_device_host_syncs_tag_{tag}",
+             dstats["host_syncs_by_tag"][tag])
     emit("serving", "session_device_host_task_dispatches",
          dstats["host_task_dispatches"])
     speedup = float(np.median(ratios))

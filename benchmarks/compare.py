@@ -1,0 +1,117 @@
+"""Diff a committed BENCH_*.json perf-trajectory artifact against a
+freshly generated one (same schema: ``run.py --json=PATH``). Usage::
+
+    python -m benchmarks.compare COMMITTED FRESH [--rtol=0.5]
+
+The committed artifact is the trajectory baseline; CI regenerates the
+same leg and runs this driver before overwriting it, so a regression
+fails the workflow instead of silently rewriting history. Three classes
+of difference:
+
+* **failures** (exit 1): a metric the committed artifact carries is
+  missing from the fresh run (the writer stopped emitting it), or a
+  *gate* metric — a 0/1 verdict like ``*_matches_serial``,
+  ``pallas_used``, ``*_host_syncs_O1`` — flipped from 1 to 0;
+* **warnings** (exit 0): a numeric value drifted beyond ``--rtol``
+  relative tolerance (timings and counters wobble with load; they are
+  reported, not gated), or a string value changed;
+* **info**: metrics the fresh run added (a new bench column) and gates
+  that flipped 0 -> 1 (an improvement).
+
+Gates are recognised by name, not value: a counter that happens to equal
+1 (e.g. ``session_host_syncs``) is numeric, never a gate.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+__all__ = ["GATE_MARKERS", "is_gate", "compare_payloads", "main"]
+
+# Substrings that mark a metric as a 0/1 verdict column. Every bench gate
+# emits under one of these spellings (bench_device / bench_soak /
+# bench_depcheck); plain counters never use them.
+GATE_MARKERS = (
+    "matches", "beats", "_O1", "used", "sublinear", "fewer_", "bounded",
+    "recycled", "compacted", "stable", "flat", "grows", "within",
+)
+
+
+def is_gate(metric: str, value) -> bool:
+    return (isinstance(value, (bool, int)) and not isinstance(value, float)
+            and value in (0, 1)
+            and any(m in metric for m in GATE_MARKERS))
+
+
+def _metrics(payload) -> Dict[Tuple[str, str], object]:
+    return {(r["section"], r["metric"]): r["value"]
+            for r in payload["results"]}
+
+
+def compare_payloads(committed, fresh, rtol: float = 0.5):
+    """Returns ``(failures, warnings, infos)`` — lists of report lines."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    infos: List[str] = []
+    cm, fm = _metrics(committed), _metrics(fresh)
+    for (section, metric), cval in sorted(cm.items()):
+        key = f"{section},{metric}"
+        if (section, metric) not in fm:
+            failures.append(f"missing from fresh run: {key} (committed={cval})")
+            continue
+        fval = fm[(section, metric)]
+        if is_gate(metric, cval) or is_gate(metric, fval):
+            if cval == 1 and fval != 1:
+                failures.append(f"gate regressed 1 -> {fval}: {key}")
+            elif cval != 1 and fval == 1:
+                infos.append(f"gate improved {cval} -> 1: {key}")
+            continue
+        if isinstance(cval, (int, float)) and isinstance(fval, (int, float)) \
+                and not isinstance(cval, bool) and not isinstance(fval, bool):
+            denom = max(abs(cval), abs(fval), 1e-12)
+            if abs(cval - fval) / denom > rtol:
+                warnings.append(
+                    f"numeric drift beyond rtol={rtol}: {key} "
+                    f"committed={cval} fresh={fval}")
+        elif cval != fval:
+            warnings.append(f"value changed: {key} "
+                            f"committed={cval!r} fresh={fval!r}")
+    for (section, metric) in sorted(fm.keys() - cm.keys()):
+        infos.append(f"new metric in fresh run: {section},{metric}")
+    return failures, warnings, infos
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    rtol = 0.5
+    paths = []
+    for arg in argv:
+        if arg.startswith("--rtol="):
+            rtol = float(arg[len("--rtol="):])
+        elif arg.startswith("--"):
+            raise SystemExit(f"unknown flag {arg!r}; only --rtol=F is accepted")
+        else:
+            paths.append(arg)
+    if len(paths) != 2:
+        raise SystemExit(
+            "usage: python -m benchmarks.compare COMMITTED FRESH [--rtol=F]")
+    with open(paths[0]) as fh:
+        committed = json.load(fh)
+    with open(paths[1]) as fh:
+        fresh = json.load(fh)
+    failures, warnings, infos = compare_payloads(committed, fresh, rtol=rtol)
+    for line in infos:
+        print(f"INFO  {line}")
+    for line in warnings:
+        print(f"WARN  {line}")
+    for line in failures:
+        print(f"FAIL  {line}")
+    print(f"compare: {len(failures)} failure(s), {len(warnings)} warning(s), "
+          f"{len(infos)} info (rtol={rtol})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

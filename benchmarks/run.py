@@ -6,7 +6,7 @@ Flags (consumed by sections via benchmarks.common):
   --window=N       ACS window size
   --streams=K      thread count for the threaded scheduler
   --inflight=M     frontier scheduler's in-flight group cap
-  --plan-mode=P    device runner plan lowering: wave | frontier
+  --plan-mode=P    device runner plan lowering: wave | frontier | loop
   --scheduler=S    restrict comparison sections to serial + S
   --json=PATH      also write every emitted row (plus flags and per-section
                    timings) as machine-readable JSON — the BENCH_*.json

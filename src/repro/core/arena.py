@@ -233,6 +233,24 @@ class SlabArena:
     def class_generation(self, class_id: int) -> int:
         return self._generation[class_id]
 
+    def device_address_table(self, operands: Sequence[Operand]
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Resolve operands to dense per-slot address arrays — the form the
+        device-resident ready-queue program indexes with plain integers
+        (DESIGN §2 A3): ``(rows, starts)``, both ``[len(operands)] int32``.
+        ``rows`` is each operand's slab row; ``starts`` the leading-axis
+        offset for row views (0 for full-buffer operands). Class ids and
+        view extents stay static in the lowered program (they select the
+        slab and the slice width), so only the row/start integers need to
+        travel as device operands."""
+        rows = np.zeros(len(operands), np.int32)
+        starts = np.zeros(len(operands), np.int32)
+        for i, op in enumerate(operands):
+            addr = self.address(op)
+            rows[i] = addr.row
+            starts[i] = addr.row_start
+        return rows, starts
+
     def live_rows(self, class_id: Optional[int] = None) -> int:
         if class_id is not None:
             return len(self._rows[class_id]) - len(self._free[class_id])

@@ -49,6 +49,7 @@ truncating operand lists.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -61,6 +62,7 @@ from .arena import SlabArena
 from .buffers import Buffer, BufferView
 from .executors import ExecStats, SerialExecutor, group_by_signature
 from .scheduler import PLAN_MODES, SchedulerReport
+from .scoreboard import dependency_arrays
 from .session import RetireCallback, SchedulerSession, TaskTicket
 from .task import Task, operand_base, operand_shape
 from .window import SchedulingWindow
@@ -72,6 +74,8 @@ __all__ = [
     "plan_frontier",
     "plan_active_fraction",
     "lower_plan",
+    "lower_epoch_program",
+    "EpochProgram",
     "DeviceStep",
     "DeviceWindowRunner",
     "DeviceSession",
@@ -99,6 +103,12 @@ class DeviceOpRegistry:
         self.strict = strict
         # opcode name -> set of (input class labels, output class labels)
         self.classes_seen: Dict[str, set] = {}
+        # The ready-queue fast path's fixed kernel table: opcode name ->
+        # elementwise shape-preserving branch fn the on-device lax.switch
+        # may call. Eligibility requires a task's fn to BE the registered
+        # branch (object identity), so the switch can never silently
+        # diverge from what the host path would have executed.
+        self._branch_fns: Dict[str, Callable] = {}
 
     def register(self, name: str, fn: Optional[Callable] = None) -> int:
         """Register ``name`` (idempotent). ``fn`` is the legacy uniform-path
@@ -140,6 +150,26 @@ class DeviceOpRegistry:
     def note_classes(self, name: str, in_labels: Tuple[str, ...],
                      out_labels: Tuple[str, ...]) -> None:
         self.classes_seen.setdefault(name, set()).add((in_labels, out_labels))
+
+    def register_switch_branch(self, name: str, fn: Callable) -> int:
+        """Admit ``fn`` to the ready-queue fast path's fixed kernel table
+        (and register the opcode name). Branches must be elementwise and
+        row-shape-preserving — the Pallas loop stores each result over the
+        task's output row. Re-registering the same fn is idempotent; a
+        different fn for a known name is a conflict (the HW table is
+        burned in)."""
+        stored = self._branch_fns.get(name)
+        if stored is not None and stored is not fn:
+            raise ValueError(
+                f"switch branch {name!r} already registered with a different "
+                "fn; the device switch table is fixed per registry")
+        self._branch_fns[name] = fn
+        return self.register(name)
+
+    def switch_branch(self, name: str) -> Optional[Callable]:
+        """The registered fast-path branch fn for ``name`` (None if the
+        opcode is interpreter-only)."""
+        return self._branch_fns.get(name)
 
     @property
     def branches(self) -> List[Callable]:
@@ -567,6 +597,246 @@ def _run_tables(steps: Sequence[DeviceStep],
     return tables
 
 
+# ---------------------------------------------------------------------------
+# Ready-queue lowering: the whole dependency frontier in one dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EpochProgram:
+    """One epoch lowered as a device-resident ready-queue program.
+
+    Static halves (``specs``/``fns``/``opnames`` — what gets compiled) are
+    separated from the device operands: per-spec dense address tables, the
+    per-task ``(spec_id, spec_pos)`` dispatch map, the dependency arrays
+    from :func:`~.scoreboard.dependency_arrays`, and the initial ring
+    state. Order is decided *on device* by the queue; the tables only say
+    where each task's operands live and who it wakes.
+    """
+
+    specs: Tuple[_StepSpec, ...]
+    fns: Tuple[Callable, ...]
+    opnames: Tuple[str, ...]
+    spec_tables: List[Dict[str, np.ndarray]]  # per spec: [n_operands, count]
+    spec_id: np.ndarray    # [n] int32: task position -> spec index
+    spec_pos: np.ndarray   # [n] int32: task position -> column in its tables
+    indeg: np.ndarray      # [n] int32 initial upstream counters
+    dep_tbl: np.ndarray    # [n, m] int32 forward edges, sentinel n
+    ring0: np.ndarray      # [n+1] int32 initially-ready positions, pad n
+    tail0: int             # count of initially-ready tasks
+    tids: Tuple[int, ...]
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tids)
+
+    def payload(self) -> Dict[str, Any]:
+        """The device-operand half, as jnp arrays (upload once, reuse
+        across epochs via the plan cache)."""
+        return {
+            "tables": tuple(
+                {k: jnp.asarray(v) for k, v in tbl.items()}
+                for tbl in self.spec_tables),
+            "spec_id": jnp.asarray(self.spec_id),
+            "spec_pos": jnp.asarray(self.spec_pos),
+            "dep_tbl": jnp.asarray(self.dep_tbl),
+            "rem0": jnp.asarray(
+                np.concatenate([self.indeg, np.zeros(1, np.int32)])),
+            "ring0": jnp.asarray(self.ring0),
+            "tail0": jnp.asarray([self.tail0], jnp.int32),
+        }
+
+
+def lower_epoch_program(tasks: Sequence[Task], registry: DeviceOpRegistry,
+                        arena: SlabArena) -> EpochProgram:
+    """Lower one epoch (tasks in program order) to a ready-queue program.
+
+    Unlike :func:`lower_plan`, no host-side wave/frontier schedule exists:
+    tasks group purely by structure (`_lowering_groups` over the whole
+    epoch — signature + static arena addressing), each group contributing
+    one spec and dense per-task address columns, and the exact dependency
+    arrays ride along so the device can discover the execution order
+    itself. Program order is topological (the window admits in program
+    order), so every edge points forward and the queue never starves.
+    """
+    tasks = list(tasks)
+    n = len(tasks)
+    groups = _lowering_groups(tasks, arena)
+    specs: List[_StepSpec] = []
+    fns: List[Callable] = []
+    opnames: List[str] = []
+    spec_tables: List[Dict[str, np.ndarray]] = []
+    spec_id = np.zeros(n, np.int32)
+    spec_pos = np.zeros(n, np.int32)
+    pos = {t.tid: i for i, t in enumerate(tasks)}
+    for s, group in enumerate(groups):
+        head = group[0]
+        opcode = registry.opcode(head.opcode)
+        n_in, n_out = len(head.inputs), len(head.outputs)
+        count = len(group)
+        in_specs: List[_OperandSpec] = []
+        out_specs: List[_OperandSpec] = []
+        tbl = {
+            "in_rows": np.zeros((n_in, count), np.int32),
+            "in_starts": np.zeros((n_in, count), np.int32),
+            "out_rows": np.zeros((n_out, count), np.int32),
+            "out_starts": np.zeros((n_out, count), np.int32),
+        }
+        for gi, task in enumerate(group):
+            spec_id[pos[task.tid]] = s
+            spec_pos[pos[task.tid]] = gi
+            for i, op in enumerate(task.inputs):
+                spec, row, start = _operand_spec(arena, op)
+                tbl["in_rows"][i, gi], tbl["in_starts"][i, gi] = row, start
+                if gi == 0:
+                    in_specs.append(spec)
+            for o, op in enumerate(task.outputs):
+                spec, row, start = _operand_spec(arena, op)
+                tbl["out_rows"][o, gi], tbl["out_starts"][o, gi] = row, start
+                if gi == 0:
+                    out_specs.append(spec)
+        registry.note_classes(
+            head.opcode,
+            tuple(arena.classes[sp.class_id].label for sp in in_specs),
+            tuple(arena.classes[sp.class_id].label for sp in out_specs))
+        # width=1: the queue executes tasks one at a time, each slicing its
+        # own column; the spec's signature keeps compile-cache identity.
+        specs.append(_StepSpec(opcode, 1, tuple(in_specs), tuple(out_specs),
+                               head.signature))
+        fns.append(head.fn)
+        opnames.append(head.opcode)
+        spec_tables.append(tbl)
+
+    indeg, dep_tbl = dependency_arrays(tasks)
+    ready = np.flatnonzero(indeg == 0)
+    ring0 = np.full(n + 1, n, np.int32)
+    ring0[: len(ready)] = ready
+    return EpochProgram(
+        specs=tuple(specs), fns=tuple(fns), opnames=tuple(opnames),
+        spec_tables=spec_tables, spec_id=spec_id, spec_pos=spec_pos,
+        indeg=indeg, dep_tbl=dep_tbl, ring0=ring0, tail0=int(len(ready)),
+        tids=tuple(t.tid for t in tasks),
+    )
+
+
+def _build_loop_interpreter(specs: Sequence[_StepSpec],
+                            fns: Sequence[Callable]) -> Callable:
+    """The general ready-queue executor: a ``lax.while_loop`` over the
+    slabs + counter/ring/flag state. Structurally the Pallas kernel
+    (`kernels/ready_queue.py`) with none of its eligibility limits —
+    views, mixed classes, multi-output and arbitrary arity all work, each
+    task dispatching through ``lax.switch`` to its spec's column-sliced
+    ``_apply_step``. One dispatch advances the whole frontier."""
+
+    def run(slabs, payload):
+        tables = payload["tables"]
+        spec_id, spec_pos = payload["spec_id"], payload["spec_pos"]
+        dep_tbl = payload["dep_tbl"]
+        n = spec_id.shape[0]
+
+        branches = []
+        for s, (spec, fn) in enumerate(zip(specs, fns)):
+            def br(operand, _spec=spec, _fn=fn, _s=s):
+                slabs_, p = operand
+                tbl = {k: jax.lax.dynamic_slice_in_dim(v, p, 1, axis=1)
+                       for k, v in tables[_s].items()}
+                return tuple(_apply_step(list(slabs_), _spec, _fn, tbl))
+            branches.append(br)
+
+        def cond(state):
+            _, _, _, _, head, tail = state
+            return head < tail
+
+        def body(state):
+            slabs_, remaining, ring, done, head, tail = state
+            t = ring[head]
+            slabs_ = jax.lax.switch(spec_id[t], branches,
+                                    (slabs_, spec_pos[t]))
+            done = done.at[t].set(1)
+            deps = dep_tbl[t]  # [m], sentinel n lands in the trash slot
+            remaining = remaining.at[deps].add(-1)
+            newly = ((deps < n) & (remaining[deps] == 0)).astype(jnp.int32)
+            offs = jnp.cumsum(newly) - newly
+            slot = jnp.where(newly == 1, tail + offs, n)
+            ring = ring.at[slot].set(deps)
+            return (slabs_, remaining, ring, done, head + 1,
+                    tail + jnp.sum(newly))
+
+        state = (tuple(slabs), payload["rem0"], payload["ring0"],
+                 jnp.zeros(n, jnp.int32), jnp.int32(0),
+                 payload["tail0"][0])
+        out = jax.lax.while_loop(cond, body, state)
+        return out[0], out[3]
+
+    return jax.jit(run)
+
+
+def _loop_pallas_parts(program: EpochProgram, registry: DeviceOpRegistry,
+                       arena: SlabArena):
+    """Fast-path eligibility: ``(class_id, branches)`` when every spec fits
+    the Pallas ready-queue kernel, else None. Requirements: one shape
+    class with padding-free 2-D rows, no views, arity <= 3, exactly one
+    output, and every fn IS its opcode's registered switch branch."""
+    if not program.specs:
+        return None
+    cids = {sp.class_id for st in program.specs
+            for sp in st.inputs + st.outputs}
+    if len(cids) != 1:
+        return None
+    cid = cids.pop()
+    padded = arena.classes[cid].padded_shape
+    if len(padded) != 1:
+        return None
+    branches = []
+    for spec, fn, name in zip(program.specs, program.fns, program.opnames):
+        if len(spec.outputs) != 1 or len(spec.inputs) > 3:
+            return None
+        for sp in spec.inputs + spec.outputs:
+            if sp.is_view or tuple(sp.true_shape) != tuple(padded):
+                return None
+        if registry.switch_branch(name) is not fn:
+            return None
+        arity = len(spec.inputs)
+        branches.append(lambda x, y, z, _fn=fn, _k=arity:
+                        _fn(*((x, y, z)[:_k])))
+    return cid, tuple(branches)
+
+
+def _loop_task_table(program: EpochProgram) -> np.ndarray:
+    """Flatten the per-spec tables into the Pallas kernel's ``[n, 5]``
+    dispatch rows ``(branch, in0, in1, in2, out_row)``; unused input slots
+    alias the task's own output row (always a valid slab index)."""
+    n = program.n_tasks
+    task_tbl = np.zeros((n, 5), np.int32)
+    for i in range(n):
+        s = int(program.spec_id[i])
+        col = int(program.spec_pos[i])
+        tbl = program.spec_tables[s]
+        out_row = int(tbl["out_rows"][0, col])
+        rows = [int(r) for r in tbl["in_rows"][:, col]]
+        rows += [out_row] * (3 - len(rows))
+        task_tbl[i] = [s] + rows + [out_row]
+    return task_tbl
+
+
+def _build_loop_pallas(class_id: int, branches: Tuple[Callable, ...],
+                       interpret: bool) -> Callable:
+    """Wrap the Pallas ready-queue kernel in the same (slabs, payload)
+    calling convention as the interpreter, so the session's dispatch path
+    is executor-agnostic."""
+    from ..kernels.ready_queue import ready_queue_call
+
+    def run(slabs, payload):
+        slab, done = ready_queue_call(
+            slabs[class_id], payload["task_tbl"], payload["dep_tbl"],
+            payload["ring0"], payload["rem0"], payload["tail0"],
+            branches=branches, interpret=interpret)
+        out = list(slabs)
+        out[class_id] = slab
+        return tuple(out), done
+
+    return run
+
+
 class DeviceWindowRunner:
     """Compile once, then execute entire task streams in ONE dispatch.
 
@@ -586,6 +856,7 @@ class DeviceWindowRunner:
         plan_mode: str = "wave",
         max_group: Optional[int] = None,
         pad_multiple: int = 8,
+        loop_pallas: Optional[bool] = None,
     ):
         if plan_mode not in PLAN_MODES:
             raise ValueError(f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")
@@ -594,6 +865,11 @@ class DeviceWindowRunner:
         self.plan_mode = plan_mode
         self.max_group = max_group
         self.pad_multiple = pad_multiple
+        # plan_mode="loop" executor selection: None = Pallas on TPU when a
+        # stream is eligible (interpreter elsewhere), True = force the
+        # Pallas kernel (interpret mode off-TPU; still requires
+        # eligibility), False = lax.while_loop interpreter always.
+        self.loop_pallas = loop_pallas
         self._compiled: Dict[Tuple, Tuple[Callable, Any]] = {}
         self._compiled_uniform: Dict[Tuple, Callable] = {}
         self.stats: Dict[str, Any] = {}
@@ -606,7 +882,8 @@ class DeviceWindowRunner:
                              registry=self.registry,
                              plan_mode=self.plan_mode,
                              max_group=self.max_group,
-                             pad_multiple=self.pad_multiple)
+                             pad_multiple=self.pad_multiple,
+                             loop_pallas=self.loop_pallas)
 
     # -- shared planning ---------------------------------------------------
     def _plan(self, tasks: Sequence[Task]):
@@ -627,6 +904,8 @@ class DeviceWindowRunner:
     ) -> SchedulerReport:
         from .executors import ExecStats
 
+        if self.plan_mode == "loop":
+            return self._execute_loop(list(tasks), buffers)
         tasks = list(tasks)
         t0 = time.perf_counter()
         plan, window = self._plan(tasks)
@@ -677,6 +956,90 @@ class DeviceWindowRunner:
             "total_waste_frac": round(arena.total_waste_frac(), 4),
             "per_class": arena.padding_waste(),
             "device_steps": len(steps),
+        }
+        return report
+
+    def _execute_loop(
+        self,
+        tasks: List[Task],
+        buffers: Optional[Sequence] = None,
+    ) -> SchedulerReport:
+        """plan_mode="loop": lower the whole stream as ONE ready-queue
+        program — no host-side wave/frontier schedule at all; the device
+        discovers execution order from the dependency arrays. The planning
+        window still runs symbolically for its stats (the dependency
+        checks are real either way), and the one host sync at the end
+        asserts every completion flag — the queue provably drained."""
+        t0 = time.perf_counter()
+        _, window = plan_waves(tasks, self.window_size, return_window=True)
+
+        arena = SlabArena(pad_multiple=self.pad_multiple)
+        if buffers is not None:
+            for b in buffers:
+                arena.add(b)
+        arena.add_tasks(tasks)
+        program = lower_epoch_program(tasks, self.registry, arena)
+        parts = None
+        if self.loop_pallas is None:
+            if jax.default_backend() == "tpu":
+                parts = _loop_pallas_parts(program, self.registry, arena)
+        elif self.loop_pallas:
+            parts = _loop_pallas_parts(program, self.registry, arena)
+        plan_time = time.perf_counter() - t0
+
+        stats = ExecStats()
+        key = ("loop", program.specs, program.dep_tbl.shape[1],
+               parts is not None,
+               tuple((c.padded_shape, c.dtype, len(arena.rows(i)))
+                     for i, c in enumerate(arena.classes)))
+        run_fn = self._compiled.get(key)
+        if run_fn is None:
+            if parts is not None:
+                run_fn = _build_loop_pallas(
+                    parts[0], parts[1],
+                    interpret=jax.default_backend() != "tpu")
+            else:
+                run_fn = _build_loop_interpreter(program.specs, program.fns)
+            self._compiled[key] = run_fn
+            stats.compiles += 1
+        payload = program.payload()
+        if parts is not None:
+            payload["task_tbl"] = jnp.asarray(_loop_task_table(program))
+
+        slabs = arena.pack()
+        t1 = time.perf_counter()
+        out_slabs, done = run_fn(tuple(slabs), payload)
+        jax.block_until_ready(out_slabs)
+        exec_time = time.perf_counter() - t1
+        done_host = np.asarray(done)
+        if not bool(done_host.all()):
+            missing = [program.tids[i]
+                       for i in np.flatnonzero(done_host == 0)]
+            raise RuntimeError(
+                f"ready-queue epoch stalled: tasks {missing} never became "
+                "ready (dependency arrays disagree with program order)")
+        written = [operand_base(op) for t in tasks for op in t.outputs]
+        arena.unpack(out_slabs, only=None if buffers is not None else written)
+
+        stats.dispatches = 1
+        stats.tasks_run = len(tasks)
+        stats.wave_widths = [len(tasks)]
+        stats.exec_seconds = exec_time
+        report = SchedulerReport(
+            window, stats, plan_time + exec_time,
+            [[t.tid for t in tasks]],
+        )
+        report.plan_seconds = plan_time  # type: ignore[attr-defined]
+        report.plan_mode = self.plan_mode  # type: ignore[attr-defined]
+        # Dense by construction: every table column holds a real task.
+        report.plan_active_fraction = 1.0  # type: ignore[attr-defined]
+        report.loop_executor = (  # type: ignore[attr-defined]
+            "pallas" if parts is not None else "interpreter")
+        report.arena_stats = {  # type: ignore[attr-defined]
+            "n_classes": arena.n_classes(),
+            "total_waste_frac": round(arena.total_waste_frac(), 4),
+            "per_class": arena.padding_waste(),
+            "device_steps": len(program.specs),
         }
         return report
 
@@ -813,9 +1176,20 @@ class DeviceSession(SchedulerSession):
     value until the next retire-boundary sync; call ``sync()`` (or
     ``flush``/``close``) before trusting direct reads.
 
+    ``plan_mode="loop"`` replaces the host-scheduled step table with the
+    **device-resident ready-queue executor** (DESIGN §2 A3): the epoch's
+    tasks lower to per-spec address tables plus exact dependency arrays
+    (`lower_epoch_program`), and a single ``lax.while_loop`` dispatch (or
+    the Pallas kernel in ``kernels/ready_queue.py`` when the stream is
+    switch-branch eligible) pops tasks as their on-device counters hit
+    zero — retirement wakes dependents without ANY host round-trip, and
+    tasks only transitively ready at launch still run in that dispatch.
+
     Per-epoch stats land in ``epoch_log`` and the aggregate in
     ``session_stats()`` / ``report.session_stats``: epochs, device
-    dispatches, plan-cache hits/misses, host syncs, padding waste.
+    dispatches (``loop_dispatches`` for ready-queue ones), plan-cache
+    hits/misses, host syncs (d2h/h2d split, per stream tag), padding
+    waste.
     """
 
     def __init__(
@@ -829,6 +1203,7 @@ class DeviceSession(SchedulerSession):
         compact_min_rows: int = 8,
         plan_cache_limit: Optional[int] = 512,
         history_limit: Optional[int] = None,
+        loop_pallas: Optional[bool] = None,
     ):
         if plan_mode not in PLAN_MODES:
             raise ValueError(
@@ -837,6 +1212,10 @@ class DeviceSession(SchedulerSession):
         self.registry = registry if registry is not None else DeviceOpRegistry(strict=False)
         self.plan_mode = plan_mode
         self.max_group = max_group
+        # "loop" executor selection (see DeviceWindowRunner): None = Pallas
+        # on TPU when eligible, True = force (interpret mode off-TPU),
+        # False = lax.while_loop interpreter always.
+        self.loop_pallas = loop_pallas
         self.arena = SlabArena(pad_multiple=pad_multiple,
                                compact_waste=compact_waste,
                                compact_min_rows=compact_min_rows)
@@ -867,10 +1246,19 @@ class DeviceSession(SchedulerSession):
         self._host_exec.stats = self.stats
         self.epochs = 0
         self.device_dispatches = 0
+        self.loop_dispatches = 0  # ready-queue dispatches (subset of device)
         self.host_task_dispatches = 0
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
+        # Host<->device transition accounting (DESIGN §2 A3: the O(1)
+        # claim is only honest if EVERY transition is counted, in both
+        # directions): `host_syncs` totals d2h slab read-backs plus h2d
+        # row refreshes forced by host-fallback writes; the split and a
+        # per-stream-tag attribution ride along for the benchmarks.
         self.host_syncs = 0
+        self.host_syncs_d2h = 0
+        self.host_syncs_h2d = 0
+        self.host_syncs_by_tag: Dict[str, int] = {}
         self.epoch_log: Any = ([] if history_limit is None
                                else deque(maxlen=history_limit))
 
@@ -903,9 +1291,25 @@ class DeviceSession(SchedulerSession):
         return plan
 
     # -- sync bookkeeping --------------------------------------------------
-    def _sync_to_host(self, buffers: Iterable[Buffer]) -> None:
+    @staticmethod
+    def _tags_of(tasks: Iterable[Task]) -> Tuple[str, ...]:
+        return tuple({getattr(t, "stream_tag", None) or "untagged"
+                      for t in tasks})
+
+    def _count_sync(self, direction: str, tags: Iterable[str]) -> None:
+        self.host_syncs += 1
+        if direction == "d2h":
+            self.host_syncs_d2h += 1
+        else:
+            self.host_syncs_h2d += 1
+        for tag in tags or ("untagged",):
+            self.host_syncs_by_tag[tag] = self.host_syncs_by_tag.get(tag, 0) + 1
+
+    def _sync_to_host(self, buffers: Iterable[Buffer],
+                      tags: Iterable[str] = ()) -> None:
         """Write the given buffers' slab rows back to host values (ONE
-        blocking sync, counted)."""
+        blocking sync, counted; ``tags`` attributes it to the stream tags
+        that forced it)."""
         bufs = [b for b in buffers if id(b) in self._device_dirty]
         if not bufs or self._slabs is None:
             return
@@ -913,12 +1317,13 @@ class DeviceSession(SchedulerSession):
         self.arena.unpack(self._slabs, only=bufs)
         for b in bufs:
             del self._device_dirty[id(b)]
-        self.host_syncs += 1
+        self._count_sync("d2h", tuple(tags))
 
     def sync(self) -> None:
         """Force every device-resident value back to host buffers."""
         with self._lock:
-            self._sync_to_host(list(self._device_dirty.values()))
+            self._sync_to_host(list(self._device_dirty.values()),
+                               tags=("sync",))
 
     # -- row lifecycle -------------------------------------------------------
     def release_buffer(self, buf: Buffer) -> bool:
@@ -955,13 +1360,15 @@ class DeviceSession(SchedulerSession):
     def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
         with self._lock:
             if self._is_retired(task.tid):
-                self._sync_to_host(list(self._device_dirty.values()))
+                self._sync_to_host(list(self._device_dirty.values()),
+                                   tags=self._tags_of([task]))
         super().on_task_retired(task, cb)
 
     def ticket(self, task: Task) -> TaskTicket:
         with self._lock:
             if self._is_retired(task.tid):
-                self._sync_to_host(list(self._device_dirty.values()))
+                self._sync_to_host(list(self._device_dirty.values()),
+                                   tags=self._tags_of([task]))
             return super().ticket(task)
 
     # -- device / host halves ----------------------------------------------
@@ -1027,12 +1434,7 @@ class DeviceSession(SchedulerSession):
 
         # Persistent slabs: append rows for newly seen buffers, refresh
         # rows whose host values changed since they were packed.
-        self._slabs = self.arena.pack_incremental(self._slabs)
-        stale = [b for b in self._host_dirty.values() if b in self.arena]
-        if stale:
-            self._slabs = self.arena.update_rows(self._slabs, stale)
-            for b in stale:
-                del self._host_dirty[id(b)]
+        self._refresh_slabs(tasks)
 
         out = run_fn(tuple(self._slabs), tables)
         self._slabs = list(out)
@@ -1047,6 +1449,20 @@ class DeviceSession(SchedulerSession):
                 self._device_dirty[id(b)] = b
                 self._host_dirty.pop(id(b), None)
 
+    def _refresh_slabs(self, tasks: List[Task]) -> None:
+        """Bring the slabs up to date before a device dispatch: append rows
+        for newly seen buffers (admission upload — not a sync round-trip)
+        and refresh rows whose host values changed since packing. The
+        refresh IS a host->device transition (the opaque-operand fallback
+        wrote those buffers host-side), so it counts toward host_syncs."""
+        self._slabs = self.arena.pack_incremental(self._slabs)
+        stale = [b for b in self._host_dirty.values() if b in self.arena]
+        if stale:
+            self._slabs = self.arena.update_rows(self._slabs, stale)
+            for b in stale:
+                del self._host_dirty[id(b)]
+            self._count_sync("h2d", self._tags_of(tasks))
+
     def _execute_host_step(self, tasks: List[Task]) -> None:
         """In-epoch host fallback (opaque operands): per-task jit dispatch,
         reading fresh values back from the slabs first when a device step
@@ -1060,7 +1476,7 @@ class DeviceSession(SchedulerSession):
                 if id(base) in self._device_dirty:
                     need[id(base)] = base
         if need:
-            self._sync_to_host(need.values())
+            self._sync_to_host(need.values(), tags=self._tags_of(tasks))
         for task in tasks:
             self._host_exec.execute_wave([task])
             self.host_task_dispatches += 1
@@ -1071,11 +1487,137 @@ class DeviceSession(SchedulerSession):
             self.waves.append([task.tid])
             self._note_retired(task)
 
+    def _drain_epoch_ordered(self) -> List[Task]:
+        """Drain the live window (retire-and-refill waves, like
+        ``_plan_epoch``) but return the tasks in PROGRAM order: the
+        ready-queue lowering needs a topological order and program order
+        guarantees every dependency edge points forward. Each task's
+        insertion seq is captured before its slot is destroyed at
+        retire."""
+        drained: List[Tuple[int, Task]] = []
+        while not self.window.idle():
+            ready = self.window.ready_tasks()
+            if not ready:
+                raise RuntimeError(
+                    "device session stall: no READY kernels but window non-empty")
+            for t in ready:
+                self.window.mark_executing(t)
+                drained.append((self.window.seq_of(t.tid), t))
+            self.window.retire_many(ready)
+        drained.sort(key=lambda p: p[0])
+        return [t for _, t in drained]
+
+    def _execute_device_loop(self, tasks: List[Task]) -> None:
+        """Dispatch one program-order run of device-lowerable tasks as a
+        single ready-queue program: the device pops tasks as their
+        counters hit zero — the host never decides a wake-up. Rides the
+        same structure-keyed plan cache as the fixed-table path (payload
+        arrays are cached device-side, so a recurring stream re-uploads
+        nothing) and the same spec-keyed program cache."""
+        self._maybe_compact()
+        self.arena.add_tasks(tasks)
+        key = ("loop", self._structure_key([tasks]))
+        cached = self._plan_cache.get(key)
+        if cached is not None and any(
+                self.arena.class_generation(cid) != gen
+                for cid, gen in cached[3]):
+            del self._plan_cache[key]
+            self.plan_cache_invalidations += 1
+            cached = None
+        if cached is None:
+            program = lower_epoch_program(tasks, self.registry, self.arena)
+            parts = None
+            if self.loop_pallas is None:
+                if jax.default_backend() == "tpu":
+                    parts = _loop_pallas_parts(program, self.registry,
+                                               self.arena)
+            elif self.loop_pallas:
+                parts = _loop_pallas_parts(program, self.registry, self.arena)
+            spec_key = ("loop", program.specs, program.dep_tbl.shape[1],
+                        parts is not None)
+            prog = self._programs.get(spec_key)
+            if prog is None:
+                if parts is not None:
+                    prog = _build_loop_pallas(
+                        parts[0], parts[1],
+                        interpret=jax.default_backend() != "tpu")
+                else:
+                    prog = _build_loop_interpreter(program.specs, program.fns)
+                self._programs[spec_key] = prog
+                self.stats.compiles += 1
+            payload = program.payload()
+            if parts is not None:
+                payload["task_tbl"] = jnp.asarray(_loop_task_table(program))
+            class_ids = sorted({
+                sp.class_id for st in program.specs
+                for sp in st.inputs + st.outputs})
+            gens = tuple(
+                (cid, self.arena.class_generation(cid)) for cid in class_ids)
+            cached = (prog, payload, len(program.specs), gens)
+            self._plan_cache[key] = cached
+            self.plan_cache_misses += 1
+            if self.plan_cache_limit is not None and \
+                    len(self._plan_cache) > self.plan_cache_limit:
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+                self.plan_cache_evictions += 1
+        else:
+            self._plan_cache[key] = self._plan_cache.pop(key)
+            self.plan_cache_hits += 1
+        run_fn, payload, _, _ = cached
+
+        self._refresh_slabs(tasks)
+        out, _done = run_fn(tuple(self._slabs), payload)
+        self._slabs = list(out)
+        self.device_dispatches += 1
+        self.loop_dispatches += 1
+        self.stats.dispatches += 1
+        self.stats.tasks_run += len(tasks)
+        self.stats.wave_widths.append(len(tasks))
+        for t in tasks:
+            for op in t.outputs:
+                b = operand_base(op)
+                self._device_dirty[id(b)] = b
+                self._host_dirty.pop(id(b), None)
+
+    def _run_epoch_loop(self) -> None:
+        """The plan_mode="loop" epoch: split the program-order drain into
+        maximal contiguous device-lowerable runs — each run is ONE
+        ready-queue dispatch (order decided on device); opaque-operand
+        runs interleave on the host path in between. Program order is
+        topological, so run ordering preserves every cross-run edge."""
+        order = self._drain_epoch_ordered()
+        syncs_before = self.host_syncs
+        hits_before = self.plan_cache_hits
+        n_device_dispatches = 0
+        n_host_tasks = 0
+        for lowerable, grp in itertools.groupby(order, key=_device_lowerable):
+            run = list(grp)
+            if lowerable:
+                self._execute_device_loop(run)
+                n_device_dispatches += 1
+                self._retire_device_segment([run])
+            else:
+                n_host_tasks += len(run)
+                self._execute_host_step(run)
+        self.epochs += 1
+        self.epoch_log.append({
+            "epoch": self.epochs,
+            "tasks": len(order),
+            "plan_steps": n_device_dispatches + n_host_tasks,
+            "device_dispatches": n_device_dispatches,
+            "host_tasks": n_host_tasks,
+            "plan_cache_hits": self.plan_cache_hits - hits_before,
+            "host_syncs": self.host_syncs - syncs_before,
+        })
+
     # -- the epoch ----------------------------------------------------------
     def _pump(self) -> bool:
         if self.window.idle():
             return False
-        self._run_epoch()
+        if self.plan_mode == "loop":
+            self._run_epoch_loop()
+        else:
+            self._run_epoch()
         return True
 
     def _retire_device_segment(self, dev_plan: List[List[Task]]) -> None:
@@ -1089,7 +1631,9 @@ class DeviceSession(SchedulerSession):
             t.tid in self._watchers or t.tid in self._tickets
             for step in dev_plan for t in step)
         if watched:
-            self._sync_to_host(list(self._device_dirty.values()))
+            self._sync_to_host(
+                list(self._device_dirty.values()),
+                tags=self._tags_of(t for step in dev_plan for t in step))
         for step in dev_plan:
             self.waves.append([t.tid for t in step])
             for t in step:
@@ -1147,8 +1691,10 @@ class DeviceSession(SchedulerSession):
         ``epoch_log``)."""
         with self._lock:
             return {
+                "plan_mode": self.plan_mode,
                 "epochs": self.epochs,
                 "device_dispatches": self.device_dispatches,
+                "loop_dispatches": self.loop_dispatches,
                 "host_task_dispatches": self.host_task_dispatches,
                 "plan_cache_hits": self.plan_cache_hits,
                 "plan_cache_misses": self.plan_cache_misses,
@@ -1157,6 +1703,9 @@ class DeviceSession(SchedulerSession):
                 "plan_cache_invalidations": self.plan_cache_invalidations,
                 "compiled_programs": len(self._programs),
                 "host_syncs": self.host_syncs,
+                "host_syncs_d2h": self.host_syncs_d2h,
+                "host_syncs_h2d": self.host_syncs_h2d,
+                "host_syncs_by_tag": dict(self.host_syncs_by_tag),
                 "n_classes": self.arena.n_classes(),
                 "padding_waste_frac": round(self.arena.total_waste_frac(), 4),
                 # row lifecycle (DESIGN §2 A3 gap (2))

@@ -186,7 +186,12 @@ SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier", "device")
 # live window and drain in one-dispatch epochs over a session-lifetime
 # slab arena with a structure-keyed plan cache.
 SESSION_NAMES = ("serial", "wave", "threaded", "frontier", "device")
-PLAN_MODES = ("wave", "frontier")
+# Device plan lowerings. "wave"/"frontier" lower an epoch to a fixed
+# DeviceStep table (order decided on host at plan time); "loop" lowers it
+# to a device-resident ready-queue program (lax.while_loop / Pallas fast
+# path) where retirement decrements dependents' counters ON DEVICE — the
+# whole dependency frontier advances in one dispatch (DESIGN §2 A3).
+PLAN_MODES = ("wave", "frontier", "loop")
 
 
 def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
@@ -198,8 +203,9 @@ def make_scheduler(name: str, window_size: int = 32, num_streams: int = 4,
     lowered-program cache — carry across streams, as a long-running
     runtime's would.
 
-    ``plan_mode`` selects the ACS-HW analogue's plan lowering (``"wave"``
-    or ``"frontier"``, DESIGN §2 A3) and only affects ``name="device"``.
+    ``plan_mode`` selects the ACS-HW analogue's plan lowering (``"wave"``,
+    ``"frontier"`` or the device-resident ready-queue ``"loop"``, DESIGN
+    §2 A3) and only affects ``name="device"``.
     """
     if plan_mode not in PLAN_MODES:
         raise ValueError(f"plan_mode must be one of {PLAN_MODES}, got {plan_mode!r}")

@@ -49,11 +49,13 @@ boundary churn without changing the claimed address set.
 from __future__ import annotations
 
 import bisect
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from .segments import SegmentSet
 
-__all__ = ["IntervalScoreboard"]
+__all__ = ["IntervalScoreboard", "dependency_arrays"]
 
 _BLOCK = 256  # target block width; blocks split at 2x, merge below 1/8x
 
@@ -329,3 +331,40 @@ class IntervalScoreboard:
                     m.delete(bi, ii)
             elif cell.same(prev):
                 m.delete(bi, ii)
+
+
+def dependency_arrays(tasks: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact intra-batch dependency structure as dense device operands.
+
+    Inserting ``tasks`` in the given (program) order into a fresh
+    scoreboard yields, for each task, the exact RAW/WAR/WAW upstream set
+    among its predecessors in the batch — the same edges the live window
+    tracks, restricted to this batch. Returned in the layout the
+    ready-queue lowering consumes (DESIGN §2 A3):
+
+    * ``indeg`` — ``[n] int32``, the per-task remaining-dependency counter
+      initial values (number of in-batch upstreams);
+    * ``dep_tbl`` — ``[n, max_out] int32`` forward edges: row *i* lists
+      the batch positions that depend on task *i*, padded with the
+      sentinel ``n`` (``max_out`` >= 1 so the table is never 0-wide).
+
+    Positions index into ``tasks``; retiring position *i* on device
+    decrements ``remaining[dep_tbl[i]]`` (the sentinel lands in a trash
+    slot) and zero-crossings join the ready ring.
+    """
+    n = len(tasks)
+    board = IntervalScoreboard()
+    pos = {t.tid: i for i, t in enumerate(tasks)}
+    out_edges: List[List[int]] = [[] for _ in range(n)]
+    indeg = np.zeros(n, np.int32)
+    for i, t in enumerate(tasks):
+        ups = board.insert(t.tid, t.read_segments, t.write_segments)
+        indeg[i] = len(ups)
+        for up in ups:
+            out_edges[pos[up]].append(i)
+    max_out = max((len(e) for e in out_edges), default=0)
+    dep_tbl = np.full((n, max(max_out, 1)), n, np.int32)
+    for i, edges in enumerate(out_edges):
+        for j, d in enumerate(sorted(edges)):
+            dep_tbl[i, j] = d
+    return indeg, dep_tbl

@@ -205,6 +205,13 @@ class SchedulingWindow:
     def resident(self) -> int:
         return len(self.slots)
 
+    def seq_of(self, tid: int) -> int:
+        """Insertion sequence number (== program order) of a resident task.
+        Consumers that retire-and-refill in waves but must reconstruct
+        program order afterwards (the device ready-queue lowering) capture
+        this BEFORE retiring — the slot is destroyed at retire."""
+        return self.slots[tid].seq
+
     # -- internals ----------------------------------------------------------
     def _retire_no_fill(self, task: Task) -> None:
         slot = self.slots.get(task.tid)

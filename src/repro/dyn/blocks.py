@@ -115,6 +115,13 @@ upsample2 = AcsKernel(name="upsample2", fn=_upsample2_fn)
 DYN_KERNELS = (conv, dwconv, pool_avg, pool_max, add2, add3, concat2,
                dense, gap, mix_weights, upsample2)
 
+#: Switch-branch table for the device ready-queue fast path: only the
+#: row-shape-preserving elementwise kernels qualify (conv/pool/dense etc.
+#: change geometry or carry static args the on-device ``lax.switch``
+#: cannot thread). Epochs mixing in any other opcode fall back to the
+#: ``lax.while_loop`` interpreter — same single dispatch, no fast path.
+SWITCH_BRANCHES = {"add2": _add2_fn, "add3": _add3_fn}
+
 
 def register_device_kernels(registry) -> Dict[str, int]:
     """Register the CNN kernel set with a
@@ -122,6 +129,8 @@ def register_device_kernels(registry) -> Dict[str, int]:
     ``repro.sim.engine.register_device_kernels``). Returns name -> opcode;
     the shape classes each opcode runs over (one per feature-map / weight
     geometry) are recorded at lowering time in ``registry.classes_seen``."""
+    for name, fn in SWITCH_BRANCHES.items():
+        registry.register_switch_branch(name, fn)
     return {k.name: registry.register(k.name) for k in DYN_KERNELS}
 
 

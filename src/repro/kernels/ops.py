@@ -20,7 +20,7 @@ from .lru_scan import lru_scan as _lru
 from .wave_elementwise import apply_wave, wave_elementwise as _wave
 
 __all__ = ["attention", "grouped_matmul", "lru_scan", "wave_step",
-           "register_device_ops"]
+           "register_device_ops", "LOOP_BRANCHES", "register_loop_branches"]
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
@@ -65,6 +65,29 @@ def register_device_ops(registry) -> dict:
         name: registry.register(name)
         for name in ("attention", "grouped_matmul", "lru_scan")
     }
+
+
+def _axpy_row(x, y):
+    return 1.5 * x + y + 1.0
+
+
+def _mul_row(x, y):
+    return x * y - 0.5
+
+
+# The device ready-queue's fixed kernel table (kernels/ready_queue.py):
+# elementwise row-shape-preserving branches the on-device lax.switch may
+# dispatch. These ARE the fns the benchmark/test mixed-tag streams launch
+# — fast-path eligibility checks fn identity against this table, so the
+# switch can never silently diverge from the host execution.
+LOOP_BRANCHES = {"axpy": _axpy_row, "mul": _mul_row}
+
+
+def register_loop_branches(registry) -> dict:
+    """Admit :data:`LOOP_BRANCHES` to a device registry's switch table
+    (the ready-queue Pallas fast path). Returns name -> opcode."""
+    return {name: registry.register_switch_branch(name, fn)
+            for name, fn in LOOP_BRANCHES.items()}
 
 
 def wave_step(slab, desc, *, branches, use_pallas: Optional[bool] = None):

@@ -1,0 +1,119 @@
+"""Device-resident ready-queue executor — the ACS-HW fast path (DESIGN §2 A3).
+
+The paper's ACS-HW window dispatches a kernel the moment its upstream
+count hits zero, entirely inside the accelerator; Atos keeps the same
+structure as device-resident task-parallel queues and Jangda et al. key
+waits on producer completion flags. This kernel is that loop as ONE
+Pallas program:
+
+* the **task table** ``[n, 5] int32`` holds each task's switch branch and
+  slab addresses ``(branch, in0, in1, in2, out_row)`` — the SRAM dispatch
+  table of Fig 20;
+* ``dep_tbl [n, m] int32`` holds forward edges (positions that depend on
+  each task, sentinel-padded with ``n``);
+* ``remaining`` (the per-task upstream counters), the **ready ring** and
+  the per-task **completion flags** live beside the slab; retiring a task
+  decrements its dependents' counters and pushes zero-crossings onto the
+  ring — no host involvement anywhere in the loop.
+
+A grid-based dispatch (``wave_elementwise``-style prefetched index maps)
+cannot express this: index maps are fixed at launch, but the ring's
+contents *are* the schedule and only exist as the loop runs. So the whole
+epoch executes as a single program (``grid=(1,)``) whose ``fori_loop``
+pops exactly ``n`` tasks: program order is topological, so every edge
+points forward and the ring can never starve — the i-th iteration always
+has a task to pop (property-tested against the serial baseline).
+
+Eligibility is narrow by design — one shape class, padding-free 2-D rows,
+arity <= 3, one output, and every kernel fn registered in the device
+registry's **switch-branch table** (the fixed HW kernel set). Everything
+else runs through the structurally identical ``lax.while_loop``
+interpreter in ``core/device_dispatch.py``; both advance the frontier in
+one dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ready_queue_call"]
+
+
+def _ready_queue_kernel(task_ref, dep_ref, ring0_ref, rem0_ref, tail_ref,
+                        slab_in_ref, slab_ref, ring_ref, rem_ref, done_ref,
+                        *, branches):
+    # Copy inputs into the mutable outputs once; the loop then runs
+    # entirely over output refs (no input_output_aliases dependency).
+    slab_ref[...] = slab_in_ref[...]
+    ring_ref[...] = ring0_ref[...]
+    rem_ref[...] = rem0_ref[...]
+    done_ref[...] = jnp.zeros_like(done_ref)
+    n, m = dep_ref.shape
+    one = jnp.ones((1,), done_ref.dtype)
+
+    def body(i, tail):
+        # head == i: one pop per iteration; edges point forward in program
+        # order, so the ring holds at least i+1 entries by iteration i.
+        t = pl.load(ring_ref, (pl.dslice(i, 1),))[0]
+        task = pl.load(task_ref, (pl.dslice(t, 1), slice(None)))[0]
+        x = pl.load(slab_ref, (pl.dslice(task[1], 1), slice(None)))[0]
+        y = pl.load(slab_ref, (pl.dslice(task[2], 1), slice(None)))[0]
+        z = pl.load(slab_ref, (pl.dslice(task[3], 1), slice(None)))[0]
+        res = jax.lax.switch(task[0], branches, x, y, z)
+        pl.store(slab_ref, (pl.dslice(task[4], 1), slice(None)),
+                 res.astype(slab_ref.dtype)[None])
+        pl.store(done_ref, (pl.dslice(t, 1),), one)
+        deps = pl.load(dep_ref, (pl.dslice(t, 1), slice(None)))[0]
+        # Retire: decrement each dependent's counter; zero-crossings join
+        # the ring at the tail. Sentinel edges (== n) hit the trash slot of
+        # `remaining`/`ring` (both sized n+1), never a live counter.
+        for j in range(m):
+            d = deps[j]
+            rem = pl.load(rem_ref, (pl.dslice(d, 1),))[0] - 1
+            pl.store(rem_ref, (pl.dslice(d, 1),), rem[None])
+            ready = (d < n) & (rem == 0)
+            slot = jnp.where(ready, tail, n)
+            pl.store(ring_ref, (pl.dslice(slot, 1),), d[None])
+            tail = tail + ready.astype(jnp.int32)
+        return tail
+
+    jax.lax.fori_loop(0, n, body, tail_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("branches", "interpret"))
+def ready_queue_call(
+    slab: jax.Array,       # [rows, d] the single shape class's slab
+    task_tbl: jax.Array,   # [n, 5] int32 (branch, in0, in1, in2, out_row)
+    dep_tbl: jax.Array,    # [n, m] int32 forward edges, sentinel n
+    ring0: jax.Array,      # [n+1] int32: initially-ready positions, pad n
+    rem0: jax.Array,       # [n+1] int32: in-degrees + one trash slot
+    tail0: jax.Array,      # [1] int32: count of initially-ready tasks
+    *,
+    branches: Tuple[Callable, ...],  # fn(x, y, z) -> [d], arity-normalized
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run one epoch's ready-queue program; returns ``(slab', done)``
+    where ``done`` is the ``[n] int32`` per-task completion-flag array
+    (all ones iff the queue drained — the lowering guarantees it)."""
+    n = task_tbl.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    slab_out, _ring, _rem, done = pl.pallas_call(
+        functools.partial(_ready_queue_kernel, branches=branches),
+        out_shape=(
+            jax.ShapeDtypeStruct(slab.shape, slab.dtype),
+            jax.ShapeDtypeStruct((n + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((n + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(task_tbl.astype(jnp.int32), dep_tbl.astype(jnp.int32),
+      ring0.astype(jnp.int32), rem0.astype(jnp.int32),
+      tail0.astype(jnp.int32), slab)
+    return slab_out, done

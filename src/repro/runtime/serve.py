@@ -332,6 +332,10 @@ class SessionServer(_ServingCore):
     device session's row lifecycle: any array buffer a producer routes
     through the arena (e.g. auxiliary device-lowerable streams submitted
     alongside requests) has its row recycled when the buffer is freed.
+    The device session defaults to ``plan_mode="loop"`` — the ready-queue
+    epoch executor that advances each dependency frontier in one dispatch
+    (DESIGN §2 A3); pass ``plan_mode="wave"``/``"frontier"`` to serve
+    through the fixed-step table lowering instead.
     """
 
     SCHEDULERS = ("frontier", "wave", "device")
@@ -339,7 +343,8 @@ class SessionServer(_ServingCore):
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 64, window: int = 32, max_queue: int = 256,
                  scheduler: str = "frontier", max_inflight: int = 8,
-                 history_limit: Optional[int] = 1024):
+                 history_limit: Optional[int] = 1024,
+                 plan_mode: str = "loop"):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
                          max_queue=max_queue, history_limit=history_limit)
         if scheduler == "frontier":
@@ -359,6 +364,7 @@ class SessionServer(_ServingCore):
             from ..core.device_dispatch import DeviceSession
 
             self.session = DeviceSession(window_size=window,
+                                         plan_mode=plan_mode,
                                          history_limit=history_limit)
             # Row lifecycle wiring: freeing any pool buffer (per-request
             # prompts, auxiliary workload buffers) releases its arena row

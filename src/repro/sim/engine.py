@@ -124,6 +124,15 @@ _OBSERVE = AcsKernel(name="observe", fn=_observe_fn)
 #: device-resident window (DESIGN §2 A3) needs registered ahead of time.
 SIM_KERNELS = (_JOINT, _CONTACT, _GROUND, _INTEGRATE, _OBSERVE)
 
+#: Switch-branch table for the device ready-queue fast path: empty on
+#: purpose. Every sim kernel either changes the row geometry (observe
+#: flattens [g,B,6] -> [g,B*6]) or spans multiple shape classes per
+#: stream (joint/contact/ground group sizes differ), so none satisfies
+#: the single-class, shape-preserving eligibility of
+#: ``kernels/ready_queue.py``. Sim epochs run through the structurally
+#: identical ``lax.while_loop`` interpreter — still one dispatch.
+SWITCH_BRANCHES: Dict[str, object] = {}
+
 
 def register_device_kernels(registry) -> Dict[str, int]:
     """Register the simulation kernel set with a
@@ -132,6 +141,8 @@ def register_device_kernels(registry) -> Dict[str, int]:
     registry entry is the opcode-table slot that gates lowering). Returns
     name -> opcode. Shape classes per opcode are recorded by the lowering
     pass in ``registry.classes_seen``."""
+    for name, fn in SWITCH_BRANCHES.items():
+        registry.register_switch_branch(name, fn)
     return {k.name: registry.register(k.name) for k in SIM_KERNELS}
 
 

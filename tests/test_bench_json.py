@@ -147,6 +147,9 @@ def test_smoke_json_artifact_real(tmp_path):
     assert any(s == "fig29_window" and "w256" in m for s, m in metrics)
     assert ("fig29_window", "ant_w256_probes_per_insert") in metrics
     assert ("fig29_window", "instanas_w256_plan_us_per_task") in metrics
+    # the device section rides in the same smoke run: its executor
+    # equivalence and one-dispatch gates must hold on THIS host too
+    _assert_device_gates(payload)
 
 
 @pytest.mark.slow  # runs the real --window=256 smoke leg (~1-2 min)
@@ -167,6 +170,168 @@ def test_smoke_json_artifact_w256_leg(tmp_path):
     payload = json.loads(path.read_text())
     _validate_schema(payload, expect_sections=_emitted_names(sections))
     assert payload["flags"]["window"] == "256"
+
+
+# Structural gates the committed device artifact must hold (1 = pass):
+# every executor mode bit-identical to serial with ONE dispatch per
+# stream, the ready-queue session draining the recurring workload with
+# O(1) host syncs, and the forced-Pallas leg actually taking the fast
+# path. No timing gates — walls and speedups are host-load-dependent and
+# only warned on by benchmarks/compare.py.
+DEVICE_GATES = {
+    "device_sim_cheetah": ("device_wave_matches_serial",
+                           "device_frontier_matches_serial",
+                           "device_loop_matches_serial"),
+    "device_dyn_routing": ("device_wave_matches_serial",
+                           "device_frontier_matches_serial",
+                           "device_loop_matches_serial"),
+    "device_session_recurring": ("session_matches_serial",
+                                 "loop_session_matches_serial",
+                                 "loop_session_host_syncs_O1",
+                                 "session_fewer_dispatches_than_per_stream"),
+    "device_loop_pallas": ("interpreter_matches_serial", "pallas_used",
+                           "pallas_matches_serial",
+                           "pallas_matches_interpreter"),
+}
+
+
+def _assert_device_gates(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    for section, gates in DEVICE_GATES.items():
+        for gate in gates:
+            assert metrics.get((section, gate)) == 1, (
+                f"device gate {section},{gate} failed: "
+                f"{ {m: v for (s, m), v in metrics.items() if s == section} }")
+    for leg in ("device_sim_cheetah", "device_dyn_routing"):
+        for mode in ("wave", "frontier", "loop"):
+            assert metrics[(leg, f"device_{mode}_dispatches")] == 1, (
+                f"{leg} device_{mode} must advance the whole stream in ONE "
+                f"dispatch, got {metrics[(leg, f'device_{mode}_dispatches')]}")
+        assert metrics[(leg, "device_loop_executor")] in (
+            "interpreter", "pallas")
+    # the evidence behind the O(1) verdict, not just the bit
+    assert metrics[("device_session_recurring", "loop_session_host_syncs")] <= 2
+    assert metrics[("device_session_recurring",
+                    "loop_session_loop_dispatches")] >= 1
+
+
+def test_committed_bench_device_json():
+    """The repo-root BENCH_device.json (regenerated by the CI device bench
+    step) must stay schema-valid with every executor-equivalence and
+    one-dispatch gate green."""
+    path = os.path.join(REPO_ROOT, "BENCH_device.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=["device"])
+    assert payload["sections"] == ["device"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_device_gates(payload)
+
+
+def _assert_depcheck_gates(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    # noise-robust forms only (see test_smoke_json_artifact_real): the
+    # w128/w256 wins carry >2x margin; growth gets a 3x ceiling.
+    assert metrics[("table2_depcheck", "scoreboard_beats_scan_w128")] == 1
+    assert metrics[("table2_depcheck", "scoreboard_beats_scan_w256")] == 1
+    assert metrics[("table2_depcheck", "scoreboard_sublinear_64_to_256")] == 1
+    assert metrics[("table2_depcheck", "scoreboard_growth_64_to_256")] < 3.0
+    assert ("table2_depcheck", "w256_s10_scoreboard_ns") in metrics
+    assert ("table2_depcheck", "w256_s10_probes_per_insert") in metrics
+
+
+def test_committed_bench_depcheck_json():
+    """The repo-root BENCH_depcheck.json must stay schema-valid with the
+    dependency-engine scaling gates green."""
+    path = os.path.join(REPO_ROOT, "BENCH_depcheck.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=["table2_depcheck"])
+    assert payload["sections"] == ["depcheck"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_depcheck_gates(payload)
+
+
+# -- benchmarks/compare.py: the committed-vs-fresh trajectory driver -------
+
+def _payload(rows):
+    return {"flags": {"smoke": "1"}, "sections": ["s"],
+            "timings_seconds": {"s": 0.1},
+            "results": [{"section": "s", "metric": m, "value": v}
+                        for m, v in rows]}
+
+
+def test_compare_gate_regression_fails():
+    from benchmarks.compare import compare_payloads
+
+    committed = _payload([("loop_matches_serial", 1), ("wall_s", 1.0)])
+    fresh = _payload([("loop_matches_serial", 0), ("wall_s", 1.0)])
+    failures, warnings, infos = compare_payloads(committed, fresh)
+    assert any("gate regressed" in f for f in failures)
+    assert not warnings
+
+
+def test_compare_missing_metric_fails():
+    from benchmarks.compare import compare_payloads
+
+    committed = _payload([("dispatches", 1), ("wall_s", 1.0)])
+    fresh = _payload([("wall_s", 1.0)])
+    failures, _, _ = compare_payloads(committed, fresh)
+    assert any("missing from fresh run" in f for f in failures)
+
+
+def test_compare_numeric_drift_warns_not_fails():
+    from benchmarks.compare import compare_payloads
+
+    committed = _payload([("wall_s", 1.0), ("dispatches", 4)])
+    fresh = _payload([("wall_s", 10.0), ("dispatches", 4)])
+    failures, warnings, _ = compare_payloads(committed, fresh, rtol=0.5)
+    assert not failures
+    assert any("numeric drift" in w for w in warnings)
+    # within tolerance -> clean
+    failures, warnings, _ = compare_payloads(
+        _payload([("wall_s", 1.0)]), _payload([("wall_s", 1.2)]), rtol=0.5)
+    assert not failures and not warnings
+
+
+def test_compare_gate_detection_is_name_based():
+    """A counter that happens to equal 1 (host_syncs) is numeric, never a
+    gate: 1 -> 0 on it must not fail; a new metric and a 0 -> 1 gate flip
+    are info."""
+    from benchmarks.compare import compare_payloads, is_gate
+
+    assert is_gate("loop_matches_serial", 1)
+    assert is_gate("pallas_used", 0)
+    assert not is_gate("host_syncs", 1)
+    assert not is_gate("active_fraction", 1.0)
+    committed = _payload([("host_syncs", 1), ("beats_scan", 0)])
+    fresh = _payload([("host_syncs", 0), ("beats_scan", 1),
+                      ("new_col", 7)])
+    failures, warnings, infos = compare_payloads(committed, fresh)
+    assert not failures
+    # host_syncs 1 -> 0 is numeric drift (a warning), never a gate failure
+    assert warnings == [
+        "numeric drift beyond rtol=0.5: s,host_syncs committed=1 fresh=0"]
+    assert any("gate improved" in i for i in infos)
+    assert any("new metric" in i for i in infos)
+
+
+def test_compare_main_exit_codes(tmp_path):
+    from benchmarks import compare
+
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(_payload([("x_matches_serial", 1)])))
+    b.write_text(json.dumps(_payload([("x_matches_serial", 1)])))
+    assert compare.main([str(a), str(b)]) == 0
+    b.write_text(json.dumps(_payload([("x_matches_serial", 0)])))
+    assert compare.main([str(a), str(b), "--rtol=0.9"]) == 1
+    with pytest.raises(SystemExit, match="usage"):
+        compare.main([str(a)])
+    with pytest.raises(SystemExit, match="unknown flag"):
+        compare.main([str(a), str(b), "--bogus"])
 
 
 # The lifetime gates the soak section must hold (1 = pass); asserted both

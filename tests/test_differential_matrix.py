@@ -39,6 +39,7 @@ from repro.core import (
 )
 from repro.core.task import default_segments
 from repro.core.wrapper import AcsKernel
+from repro.kernels.ops import LOOP_BRANCHES
 
 D = 4
 WINDOW = 16
@@ -71,12 +72,10 @@ def _build_dyn(seed=0):
     return (lambda: np.asarray(out.value)), stream.tasks
 
 
-def _axpy(x, y):
-    return 1.5 * x + y + 1.0
-
-
-def _mul(x, y):
-    return x * y - 0.5
+# The ready-queue switch-branch fns (kernels/ops.py): shared objects, so
+# the device registry's switch table and these streams can never diverge.
+_axpy = LOOP_BRANCHES["axpy"]
+_mul = LOOP_BRANCHES["mul"]
 
 
 def _build_mixed_tag(seed=0):
@@ -158,6 +157,94 @@ class TestSessionMatrix:
             # tagged tenant accounting must cover every task exactly once
             assert sum(session.retired_by_tag.values()) == len(tasks)
             assert set(session.retired_by_tag) == {"tenantA", "tenantB"}
+
+
+# ---------------------------------------------------------------------------
+# plan_mode="loop": the ready-queue epoch executor (DESIGN §2 A3) is a
+# plan-mode axis on the "device" registry entries, not a registry name —
+# covered here explicitly on the same three stream families, batch and
+# interleaved-live.
+# ---------------------------------------------------------------------------
+
+class TestLoopModeMatrix:
+    @pytest.mark.parametrize("stream_name", sorted(STREAMS))
+    def test_scheduler_matches_serial(self, stream_name):
+        ref = _ref(stream_name)
+        snap, tasks = STREAMS[stream_name]()
+        run = make_scheduler("device", window_size=WINDOW, plan_mode="loop")
+        report = run(tasks)
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.exec_stats["tasks_run"] == len(tasks)
+
+    @pytest.mark.parametrize("stream_name", sorted(STREAMS))
+    def test_interleaved_feed_matches_serial(self, stream_name):
+        ref = _ref(stream_name)
+        snap, tasks = STREAMS[stream_name]()
+        session = make_session("device", window_size=WINDOW,
+                               plan_mode="loop")
+        rng = np.random.RandomState(11)
+        i = 0
+        while i < len(tasks):
+            k = 1 + rng.randint(6)
+            session.submit(tasks[i: i + k])
+            i += k
+            if rng.rand() < 0.6:
+                session.poll()
+        report = session.close()
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.window_stats["retired"] == len(tasks)
+        stats = session.session_stats()
+        assert stats["plan_mode"] == "loop"
+        assert stats["loop_dispatches"] >= 1
+
+    def test_mid_epoch_admission_preserves_program_order(self):
+        """Retirement callbacks on a RAW chain must fire in program order
+        even when later chain links are admitted mid-flight (after polls
+        already drained earlier epochs): the ready queue decides execution
+        order on device, but the observable retire order is the chain
+        order."""
+        pool = BufferPool()
+        buf = pool.alloc((D,), np.float32, value=jnp.zeros(D, np.float32))
+        other = pool.alloc((D,), np.float32, value=jnp.ones(D, np.float32))
+        session = make_session("device", window_size=8, plan_mode="loop")
+        retired_order = []
+        session.add_retire_listener(lambda t: retired_order.append(t.tid))
+
+        def chain_task(k):
+            fn = _axpy if k % 2 == 0 else _mul
+            ins, outs = (buf, other), (buf,)
+            r, w = default_segments(ins, outs)
+            return Task(opcode="axpy" if k % 2 == 0 else "mul", fn=fn,
+                        inputs=ins, outputs=outs,
+                        read_segments=r, write_segments=w)
+
+        tasks = [chain_task(k) for k in range(18)]
+        # admit in three slices with polls between: slice 2 arrives while
+        # slice 1's epoch has already drained, slice 3 mid-session
+        session.submit(tasks[:6])
+        session.poll()
+        session.submit(tasks[6:11])
+        session.poll()
+        session.submit(tasks[11:])
+        session.close()
+        assert retired_order == [t.tid for t in tasks]
+        # serial equivalence of the final chain value (opcode names must
+        # stay distinct per fn — executor jit caches key on opcode)
+        pool2 = BufferPool()
+        buf2 = pool2.alloc((D,), np.float32, value=jnp.zeros(D, np.float32))
+        other2 = pool2.alloc((D,), np.float32, value=jnp.ones(D, np.float32))
+
+        def ref_task(k):
+            fn = _axpy if k % 2 == 0 else _mul
+            ins, outs = (buf2, other2), (buf2,)
+            r, w = default_segments(ins, outs)
+            return Task(opcode="axpy" if k % 2 == 0 else "mul", fn=fn,
+                        inputs=ins, outputs=outs,
+                        read_segments=r, write_segments=w)
+
+        run_serial([ref_task(k) for k in range(18)])
+        np.testing.assert_array_equal(np.asarray(buf.value),
+                                      np.asarray(buf2.value))
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import BufferPool, SESSION_NAMES, Task, make_session, run_serial
 from repro.core.task import default_segments
+from repro.kernels.ops import LOOP_BRANCHES
 
 D = 4
 N_TASKS = 24
@@ -33,16 +34,22 @@ SUBMIT, POLL, DRIVE, FLUSH, CLOSE = range(5)
 # (subsequent CLOSE draws assert the double-close error path).
 ACTION_WEIGHTS = (SUBMIT, SUBMIT, SUBMIT, POLL, DRIVE, FLUSH, CLOSE)
 
+# The shared ready-queue switch-branch fns (kernels/ops.py): identity with
+# the registry's switch table keeps the device_loop kind eligible for the
+# Pallas fast path's lowering checks.
+OPS = {"axpy": LOOP_BRANCHES["axpy"], "mul": LOOP_BRANCHES["mul"]}
 
-def _axpy(x, y):
-    return 1.5 * x + y + 1.0
+# Session kinds under fuzz: every registry name, plus the device session
+# re-planned through the ready-queue epoch executor (a plan-mode axis on
+# "device", not a registry name).
+FUZZ_KINDS = tuple(SESSION_NAMES) + ("device_loop",)
 
 
-def _mul(x, y):
-    return x * y - 0.5
-
-
-OPS = {"axpy": _axpy, "mul": _mul}
+def _make_fuzz_session(kind, window_size=4):
+    if kind == "device_loop":
+        return make_session("device", window_size=window_size,
+                            plan_mode="loop")
+    return make_session(kind, window_size=window_size)
 
 
 def build_stream(seed):
@@ -85,7 +92,7 @@ def _check_open_invariants(session):
 
 def _run_script(kind, seed, script):
     bufs, tasks = build_stream(seed)
-    session = make_session(kind, window_size=4)
+    session = _make_fuzz_session(kind)
     cursor = 0
     report = None
     for code, arg in script:
@@ -142,7 +149,7 @@ def _run_script(kind, seed, script):
 
 
 class TestSessionFuzz:
-    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    @pytest.mark.parametrize("kind", FUZZ_KINDS)
     def test_random_interleavings(self, kind):
         # parametrize composes with the property via an inner closure: the
         # _prophelper shim (and hypothesis) fill ONLY the drawn arguments,
@@ -157,7 +164,7 @@ class TestSessionFuzz:
 
         prop()
 
-    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    @pytest.mark.parametrize("kind", FUZZ_KINDS)
     def test_callbacks_fire_once_under_interleaving(self, kind):
         """Retirement observation stays exact under chunked feeding: every
         submitted task's callback fires exactly once, and per-tag counts
@@ -165,7 +172,7 @@ class TestSessionFuzz:
         bufs, tasks = build_stream(3)
         for t in tasks:
             t.stream_tag = "fuzz"
-        session = make_session(kind, window_size=4)
+        session = _make_fuzz_session(kind)
         seen = []
         i = 0
         rng = np.random.RandomState(11)
