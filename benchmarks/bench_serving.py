@@ -96,11 +96,16 @@ def main() -> None:
     max_len = 16 + max_new + 4
     window = opt("window", 16)
 
-    rng = np.random.RandomState(0)
     # fixed prompt length => one prefill signature (compile cost amortizes
-    # identically for both servers)
-    prompts = [rng.randint(0, cfg.vocab, 16) for _ in range(n_req)]
-    warm_prompts = [rng.randint(0, cfg.vocab, 16) for _ in range(max_slots)]
+    # identically for both servers). Each draw gets its own RandomState:
+    # a shared stream would make warm_prompts depend on n_req (which
+    # differs between --smoke and full runs), so the warmup trace — and
+    # anything downstream of it — would silently change with sizing flags.
+    prompt_rng = np.random.RandomState(0)
+    prompts = [prompt_rng.randint(0, cfg.vocab, 16) for _ in range(n_req)]
+    warm_rng = np.random.RandomState(1)
+    warm_prompts = [warm_rng.randint(0, cfg.vocab, 16)
+                    for _ in range(max_slots)]
 
     def _warm(server):
         """Closed-loop warmup: one drained round per concurrency level k

@@ -26,6 +26,7 @@ from . import (
     bench_device,
     bench_dynamic_dnn,
     bench_frontier,
+    bench_mesh_scaling,
     bench_moe_waves,
     bench_occupancy,
     bench_rl_e2e,
@@ -51,6 +52,7 @@ SECTIONS = {
     "device": bench_device,              # ACS-HW analogue (DESIGN §2 A3)
     "serving": bench_serving,            # live sessions (DESIGN §10)
     "soak": bench_soak,                  # lifetime invariants (DESIGN §2 A3)
+    "mesh_scaling": bench_mesh_scaling,  # mesh-sharded window (DESIGN §12)
 }
 
 # The sections --smoke runs when none are named: the ones exercising plan
@@ -58,7 +60,8 @@ SECTIONS = {
 # the scoreboard dependency engine (depcheck's probe-vs-scan counters and
 # window_size's window=256 leg over the real sim/dyn streams) — so
 # regressions there fail in CI, not at bench time.
-SMOKE_SECTIONS = ("depcheck", "device", "frontier", "serving", "window_size")
+SMOKE_SECTIONS = ("depcheck", "device", "frontier", "serving",
+                  "window_size", "mesh_scaling")
 
 
 def main() -> None:

@@ -1,7 +1,8 @@
 """repro.core — ACS: windowed out-of-order kernel scheduling (the paper's
 contribution), adapted to TPU/JAX. See DESIGN.md §2 for the mapping."""
 
-from .arena import ArenaAddress, ShapeClass, SlabArena, pad_shape
+from .arena import (ArenaAddress, ShapeClass, ShardTransferTable, SlabArena,
+                    pad_shape, row_capacity)
 from .buffers import Buffer, BufferPool, BufferView
 from .dag_baseline import DagRunner, build_full_dag, level_schedule
 from .device_dispatch import (
@@ -15,6 +16,7 @@ from .device_dispatch import (
 )
 from .executors import FusedWaveExecutor, GroupExecutor, SerialExecutor
 from .frontier import AsyncFrontierScheduler, DispatchQueue, FrontierSession
+from .mesh_session import MeshDeviceSession
 from .perfmodel import (
     DeviceModel,
     RTX3060_LIKE,
@@ -52,9 +54,12 @@ __all__ = [
     "ShapeClass",
     "SlabArena",
     "pad_shape",
+    "ShardTransferTable",
+    "row_capacity",
     "DeviceOpRegistry",
     "DeviceSession",
     "DeviceWindowRunner",
+    "MeshDeviceSession",
     "lower_plan",
     "plan_active_fraction",
     "plan_frontier",

@@ -59,7 +59,22 @@ import numpy as np
 from .buffers import Buffer, BufferView
 from .task import Operand, Task, operand_base
 
-__all__ = ["ShapeClass", "ArenaAddress", "SlabArena", "pad_shape"]
+__all__ = ["ShapeClass", "ArenaAddress", "SlabArena", "ShardTransferTable",
+           "pad_shape", "row_capacity"]
+
+
+def row_capacity(n_rows: int) -> int:
+    """Physical slab rows for ``n_rows`` logical rows: the next power of
+    two (floored at 8). Slab shapes are jit trace signatures — an
+    exact-fit slab forces a retrace (and a full XLA compile) every time
+    the resident peak moves by one row, which dominates wall time for
+    small irregular kernels. Quantizing capacity bounds the distinct
+    shapes per class at O(log peak); rows past the logical count hold
+    zeros and are never addressed."""
+    cap = 8
+    while cap < n_rows:
+        cap *= 2
+    return cap
 
 
 def pad_shape(shape: Tuple[int, ...], pad_multiple: int) -> Tuple[int, ...]:
@@ -101,6 +116,46 @@ class ArenaAddress:
     @property
     def is_view(self) -> bool:
         return self.row_count > 0
+
+
+class ShardTransferTable:
+    """Cross-shard row-transfer ledger for a mesh-sharded window.
+
+    Each shard owns its own :class:`SlabArena` — a shard-local address
+    space: ``(class_id, row)`` coordinates are meaningful only against the
+    owning shard's slabs, so a buffer consumed on a different shard than
+    the one that produced it cannot be addressed remotely; its row is
+    STAGED across at an epoch boundary (owner syncs the row to host, the
+    destination refreshes it on its next dispatch). This table records
+    every such staged copy — source shard, destination shard, shape-class
+    label, row bytes — so the mesh session can report cross-device traffic
+    honestly (the paper's concurrency claims are only meaningful net of
+    transfer cost).
+    """
+
+    def __init__(self) -> None:
+        self.transfers = 0
+        self.bytes = 0
+        # (src_shard, dst_shard) -> count; class label -> count.
+        self.by_route: Dict[Tuple[int, int], int] = {}
+        self.by_class: Dict[str, int] = {}
+
+    def record(self, src_shard: int, dst_shard: int, class_label: str,
+               nbytes: int) -> None:
+        self.transfers += 1
+        self.bytes += int(nbytes)
+        route = (src_shard, dst_shard)
+        self.by_route[route] = self.by_route.get(route, 0) + 1
+        self.by_class[class_label] = self.by_class.get(class_label, 0) + 1
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "transfers": self.transfers,
+            "bytes": self.bytes,
+            "by_route": {f"{s}->{d}": n
+                         for (s, d), n in sorted(self.by_route.items())},
+            "by_class": dict(sorted(self.by_class.items())),
+        }
 
 
 class SlabArena:
@@ -148,6 +203,12 @@ class SlabArena:
             padded_shape=pad_shape(tuple(buf.shape), self.pad_multiple),
             dtype=str(np.dtype(buf.dtype)),
         )
+
+    def row_nbytes(self, buf: Buffer) -> int:
+        """Padded slab-row bytes a transfer of this buffer moves — what a
+        :class:`ShardTransferTable` records per staged cross-shard copy."""
+        cls = self.class_of(buf)
+        return cls.row_elems * np.dtype(cls.dtype).itemsize
 
     def add(self, buf: Buffer) -> Tuple[int, int]:
         """Assign ``buf`` a (class_id, row); idempotent per buffer object."""
@@ -351,8 +412,19 @@ class SlabArena:
             self._packed_rows[cid] = n_packed_live
             if out is not None and cid < len(out):
                 keep = live_old[:n_packed_live]
-                out[cid] = out[cid][jnp.asarray(keep, dtype=jnp.int32)] \
+                slab = out[cid][jnp.asarray(keep, dtype=jnp.int32)] \
                     if keep else out[cid][:0]
+                # Re-pad to quantized capacity over the squeezed logical
+                # rows, so the follow-up pack_incremental appends within
+                # capacity instead of changing the slab shape again.
+                cap = row_capacity(len(self._rows[cid]))
+                if cap > slab.shape[0]:
+                    cls = self._classes[cid]
+                    slab = jnp.concatenate(
+                        [slab,
+                         jnp.zeros((cap - slab.shape[0],) + cls.padded_shape,
+                                   slab.dtype)])
+                out[cid] = slab
             moved[cid] = remap
             self._generation[cid] += 1
             self.generation += 1
@@ -391,7 +463,13 @@ class SlabArena:
         for cid, cls in enumerate(self._classes):
             dtype = np.dtype(cls.dtype)
             rows = [self._row_value(b, cls) for b in self._rows[cid]]
-            slabs.append(jnp.stack(rows).astype(dtype))
+            slab = jnp.stack(rows).astype(dtype)
+            cap = row_capacity(len(rows))
+            if cap > len(rows):
+                slab = jnp.concatenate(
+                    [slab, jnp.zeros((cap - len(rows),) + cls.padded_shape,
+                                     dtype)])
+            slabs.append(slab)
             self._packed_rows[cid] = len(self._rows[cid])
             self._reused[cid].clear()  # every row just re-read from host
         return slabs
@@ -415,9 +493,18 @@ class SlabArena:
                     [self._row_value(b, cls) for b in self._rows[cid][packed:]]
                 ).astype(dtype)
                 if cid < len(out):
-                    out[cid] = jnp.concatenate([out[cid], fresh], axis=0)
+                    cap = out[cid].shape[0]
+                    if total > cap:
+                        new_cap = row_capacity(total)
+                        out[cid] = jnp.concatenate(
+                            [out[cid],
+                             jnp.zeros((new_cap - cap,) + cls.padded_shape,
+                                       dtype)])
+                    out[cid] = out[cid].at[packed:total].set(fresh)
                 else:
-                    out.append(fresh)
+                    cap = row_capacity(total)
+                    slab = jnp.zeros((cap,) + cls.padded_shape, dtype)
+                    out.append(slab.at[:total].set(fresh))
                 self._packed_rows[cid] = total
             if self._reused[cid]:
                 # Recycled rows inside the watermark: the slab still holds

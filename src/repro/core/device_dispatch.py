@@ -63,7 +63,7 @@ from .buffers import Buffer, BufferView
 from .executors import ExecStats, SerialExecutor, group_by_signature
 from .scheduler import PLAN_MODES, SchedulerReport
 from .scoreboard import dependency_arrays
-from .session import RetireCallback, SchedulerSession, TaskTicket
+from .session import SchedulerSession
 from .task import Task, operand_base, operand_shape
 from .window import SchedulingWindow
 
@@ -661,6 +661,20 @@ def lower_epoch_program(tasks: Sequence[Task], registry: DeviceOpRegistry,
     tasks = list(tasks)
     n = len(tasks)
     groups = _lowering_groups(tasks, arena)
+    # Canonical group order: _lowering_groups returns first-occurrence
+    # order, so two epochs over the SAME spec set but different arrival
+    # interleavings would produce permuted `specs` tuples — distinct
+    # program-cache keys and distinct jit traces for identical programs.
+    # Spec order is semantically free here (the queue dispatches per task
+    # through spec_id), so sort by structure and collapse the permutations.
+    def _group_key(g):
+        head = g[0]
+        return (head.opcode, repr(head.signature),
+                repr([(arena.address(o).class_id, arena.address(o).is_view,
+                       arena.address(o).row_count)
+                      for o in tuple(head.inputs) + tuple(head.outputs)]))
+
+    groups.sort(key=_group_key)
     specs: List[_StepSpec] = []
     fns: List[Callable] = []
     opnames: List[str] = []
@@ -716,6 +730,71 @@ def lower_epoch_program(tasks: Sequence[Task], registry: DeviceOpRegistry,
         indeg=indeg, dep_tbl=dep_tbl, ring0=ring0, tail0=int(len(ready)),
         tids=tuple(t.tid for t in tasks),
     )
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    """Next power-of-two bucket >= n (floored at ``minimum``)."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def _padded_loop_payload(program: EpochProgram) -> Dict[str, Any]:
+    """Bucket-pad the interpreter payload so jit signatures quantize.
+
+    The loop interpreter's trace signature is the payload's SHAPES: task
+    count ``n``, per-spec column counts, and dependency width ``m``. A
+    live-fed window sees a near-continuous spread of all three, and every
+    new combination silently retraces + XLA-compiles — which dominates
+    wall time for small irregular kernels (exactly the regime the paper
+    targets). Padding each dimension to a power-of-two bucket collapses
+    that spread to O(log) signatures per spec set.
+
+    Pad tasks are unreachable: their counters start at 1 and nothing
+    points at them, so the ``head < tail`` loop drains exactly the real
+    tasks and exits (this is why the Pallas path — whose ``fori_loop``
+    pops exactly ``n`` tasks — keeps the exact payload instead). Dep-table
+    sentinels are remapped from ``n`` to the padded count so they keep
+    landing in the trash slot of ``remaining``/``ring``.
+    """
+    n = program.n_tasks
+    n_p = _bucket(n)
+    m = program.dep_tbl.shape[1]
+    m_p = _bucket(max(m, 1), minimum=2)
+    spec_id = np.zeros(n_p, np.int32)
+    spec_id[:n] = program.spec_id
+    spec_pos = np.zeros(n_p, np.int32)
+    spec_pos[:n] = program.spec_pos
+    dep_block = program.dep_tbl.astype(np.int32, copy=True)
+    dep_block[dep_block == n] = n_p
+    dep_tbl = np.full((n_p, m_p), n_p, np.int32)
+    dep_tbl[:n, :m] = dep_block
+    rem0 = np.ones(n_p + 1, np.int32)  # pad tasks never reach zero
+    rem0[:n] = program.indeg
+    rem0[n_p] = 0  # trash slot
+    ring0 = np.full(n_p + 1, n_p, np.int32)
+    ring0[: program.tail0] = program.ring0[: program.tail0]
+    tables = []
+    for tbl in program.spec_tables:
+        count = tbl["in_rows"].shape[1] if tbl["in_rows"].size else \
+            tbl["out_rows"].shape[1]
+        c_p = _bucket(count)
+        padded = {}
+        for k, v in tbl.items():
+            out = np.zeros((v.shape[0], c_p), np.int32)
+            out[:, : v.shape[1]] = v
+            padded[k] = jnp.asarray(out)
+        tables.append(padded)
+    return {
+        "tables": tuple(tables),
+        "spec_id": jnp.asarray(spec_id),
+        "spec_pos": jnp.asarray(spec_pos),
+        "dep_tbl": jnp.asarray(dep_tbl),
+        "rem0": jnp.asarray(rem0),
+        "ring0": jnp.asarray(ring0),
+        "tail0": jnp.asarray([program.tail0], jnp.int32),
+    }
 
 
 def _build_loop_interpreter(specs: Sequence[_StepSpec],
@@ -1204,6 +1283,8 @@ class DeviceSession(SchedulerSession):
         plan_cache_limit: Optional[int] = 512,
         history_limit: Optional[int] = None,
         loop_pallas: Optional[bool] = None,
+        device: Optional[Any] = None,
+        pad_payloads: bool = False,
     ):
         if plan_mode not in PLAN_MODES:
             raise ValueError(
@@ -1212,10 +1293,25 @@ class DeviceSession(SchedulerSession):
         self.registry = registry if registry is not None else DeviceOpRegistry(strict=False)
         self.plan_mode = plan_mode
         self.max_group = max_group
+        # Optional jax.Device pin: slabs are committed there before each
+        # dispatch, so jit execution (and every uncommitted payload array)
+        # follows — this is what gives MeshDeviceSession's shards their
+        # own dispatch streams. None keeps JAX's default placement.
+        self.device = device
         # "loop" executor selection (see DeviceWindowRunner): None = Pallas
         # on TPU when eligible, True = force (interpret mode off-TPU),
         # False = lax.while_loop interpreter always.
         self.loop_pallas = loop_pallas
+        # Opt-in payload shape-bucketing (interpreter path only): pads
+        # epoch size, dep width and per-spec counts to pow2 buckets so a
+        # serving stream whose per-epoch task counts wander does not
+        # recompile every epoch. OFF by default because a bucketed program
+        # is a DIFFERENT XLA program than the exact one — same math, but
+        # compiler fusion may round differently at the last ulp, so exact
+        # payloads are required wherever bit-identity with the serial
+        # baseline is asserted. Benchmarks enable it on every session of
+        # an A/B pair (single and mesh alike), so ratios stay fair.
+        self.pad_payloads = pad_payloads
         self.arena = SlabArena(pad_multiple=pad_multiple,
                                compact_waste=compact_waste,
                                compact_min_rows=compact_min_rows)
@@ -1325,6 +1421,26 @@ class DeviceSession(SchedulerSession):
             self._sync_to_host(list(self._device_dirty.values()),
                                tags=("sync",))
 
+    def sync_buffers(self, buffers: Iterable[Buffer],
+                     tags: Iterable[str] = ("transfer",)) -> None:
+        """Sync just the given buffers' device values back to host (one
+        counted d2h when any is device-dirty). The mesh session stages a
+        cross-shard edge as: owner ``sync_buffers`` -> destination
+        ``mark_host_dirty`` -> destination's next dispatch re-uploads."""
+        with self._lock:
+            self._sync_to_host(list(buffers), tags=tuple(tags))
+
+    def mark_host_dirty(self, buf: Buffer) -> None:
+        """Tell this session the buffer's HOST value is now authoritative
+        (another shard produced it, or the producer rewrote it between
+        epochs): drop any stale device-dirty claim and schedule a row
+        refresh at the next dispatch. No-op for buffers this session's
+        arena has never packed — their next pack reads host values anyway."""
+        with self._lock:
+            self._device_dirty.pop(id(buf), None)
+            if buf in self.arena:
+                self._host_dirty[id(buf)] = buf
+
     # -- row lifecycle -------------------------------------------------------
     def release_buffer(self, buf: Buffer) -> bool:
         """Release a buffer the producer is done with: its arena row joins
@@ -1357,19 +1473,9 @@ class DeviceSession(SchedulerSession):
     # Observers registered AFTER an unwatched epoch retired their task hit
     # the base class's fire-immediately paths — sync first, so a late
     # callback/ticket holder reads host values as fresh as an early one's.
-    def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
-        with self._lock:
-            if self._is_retired(task.tid):
-                self._sync_to_host(list(self._device_dirty.values()),
-                                   tags=self._tags_of([task]))
-        super().on_task_retired(task, cb)
-
-    def ticket(self, task: Task) -> TaskTicket:
-        with self._lock:
-            if self._is_retired(task.tid):
-                self._sync_to_host(list(self._device_dirty.values()),
-                                   tags=self._tags_of([task]))
-            return super().ticket(task)
+    def _pre_observe_retired(self, task: Task) -> None:
+        self._sync_to_host(list(self._device_dirty.values()),
+                           tags=self._tags_of([task]))
 
     # -- device / host halves ----------------------------------------------
     def _structure_key(self, dev_plan: Sequence[Sequence[Task]]) -> Tuple:
@@ -1462,6 +1568,11 @@ class DeviceSession(SchedulerSession):
             for b in stale:
                 del self._host_dirty[id(b)]
             self._count_sync("h2d", self._tags_of(tasks))
+        if self.device is not None:
+            # Commit to the pinned device (no-op for rows already there);
+            # dispatch then executes on it regardless of JAX's default.
+            self._slabs = [jax.device_put(s, self.device)
+                           for s in self._slabs]
 
     def _execute_host_step(self, tasks: List[Task]) -> None:
         """In-epoch host fallback (opaque operands): per-task jit dispatch,
@@ -1488,24 +1599,10 @@ class DeviceSession(SchedulerSession):
             self._note_retired(task)
 
     def _drain_epoch_ordered(self) -> List[Task]:
-        """Drain the live window (retire-and-refill waves, like
-        ``_plan_epoch``) but return the tasks in PROGRAM order: the
-        ready-queue lowering needs a topological order and program order
-        guarantees every dependency edge points forward. Each task's
-        insertion seq is captured before its slot is destroyed at
-        retire."""
-        drained: List[Tuple[int, Task]] = []
-        while not self.window.idle():
-            ready = self.window.ready_tasks()
-            if not ready:
-                raise RuntimeError(
-                    "device session stall: no READY kernels but window non-empty")
-            for t in ready:
-                self.window.mark_executing(t)
-                drained.append((self.window.seq_of(t.tid), t))
-            self.window.retire_many(ready)
-        drained.sort(key=lambda p: p[0])
-        return [t for _, t in drained]
+        """Drain the live window into program order (the ready-queue
+        lowering needs a topological order) — see
+        :meth:`SchedulingWindow.drain_program_order`."""
+        return self.window.drain_program_order()
 
     def _execute_device_loop(self, tasks: List[Task]) -> None:
         """Dispatch one program-order run of device-lowerable tasks as a
@@ -1533,8 +1630,19 @@ class DeviceSession(SchedulerSession):
                                                self.arena)
             elif self.loop_pallas:
                 parts = _loop_pallas_parts(program, self.registry, self.arena)
-            spec_key = ("loop", program.specs, program.dep_tbl.shape[1],
-                        parts is not None)
+            # Interpreter payloads are bucket-padded only when the session
+            # opted in (shape quantization — see _padded_loop_payload);
+            # the Pallas fori_loop pops exactly n tasks, so the fast path
+            # always keeps the exact payload.
+            if parts is None and self.pad_payloads:
+                payload = _padded_loop_payload(program)
+            else:
+                payload = program.payload()
+                if parts is not None:
+                    payload["task_tbl"] = jnp.asarray(
+                        _loop_task_table(program))
+            spec_key = ("loop", program.specs,
+                        payload["dep_tbl"].shape[1], parts is not None)
             prog = self._programs.get(spec_key)
             if prog is None:
                 if parts is not None:
@@ -1545,9 +1653,6 @@ class DeviceSession(SchedulerSession):
                     prog = _build_loop_interpreter(program.specs, program.fns)
                 self._programs[spec_key] = prog
                 self.stats.compiles += 1
-            payload = program.payload()
-            if parts is not None:
-                payload["task_tbl"] = jnp.asarray(_loop_task_table(program))
             class_ids = sorted({
                 sp.class_id for st in program.specs
                 for sp in st.inputs + st.outputs})

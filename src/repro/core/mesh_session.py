@@ -1,0 +1,410 @@
+"""Mesh-sharded device window: per-device slab shards behind one global
+admission plane (DESIGN §12).
+
+Everything below `DeviceSession` runs on ONE device: one slab arena, one
+dispatch stream, one plan cache. :class:`MeshDeviceSession` partitions the
+live window across a JAX device mesh (``launch.mesh.make_window_mesh``):
+
+* each **shard** is a full `DeviceSession` — its own arena (a shard-local
+  address space), plan/program caches, and ready-queue epoch executor
+  (``plan_mode="loop"`` unchanged) — pinned to one mesh device via the
+  session's ``device=`` commitment, so every shard owns a dispatch
+  stream;
+* the **admission plane** is the outer scheduling window: producers
+  submit in program order exactly as with any session, and each epoch the
+  plane drains the window in program order, replays a fresh
+  :class:`~.scoreboard.IntervalScoreboard` over the epoch to recover each
+  task's exact RAW producers (``probe_writers``) and full RAW/WAR/WAW
+  hazard set (``insert``), and **places** the task:
+
+  1. a task with same-epoch RAW producers goes to its latest producer's
+     shard (dependent chains never leave their device — the placement
+     invariant the property tests pin);
+  2. else any same-epoch hazard upstream (WAR/WAW) decides the same way;
+  3. else **affinity**: the shard that owns (last wrote) one of the
+     task's operand buffers — this keeps a decode chain whose epochs
+     arrive one step at a time on its device without any same-epoch
+     edge;
+  4. else the least-loaded shard (new independent chains spread out).
+
+* within an epoch, tasks stream to their shards in **sub-epochs**: the
+  plane walks program order and cuts a barrier only when a task touches a
+  *base buffer* another shard wrote (or writes one another shard read) in
+  the current sub-epoch — inside a sub-epoch no cross-shard write
+  conflicts exist at whole-buffer granularity (stricter than hazards:
+  disjoint row-views of one buffer must not split row ownership across
+  shards), so shards dispatch independently (concurrent streams on real
+  multi-device hardware);
+* only true **cross-shard edges** move data, staged at sub-epoch
+  boundaries through the host image: the owning shard syncs the row back
+  (``sync_buffers``, a counted d2h), the consuming shard marks it
+  host-authoritative (``mark_host_dirty``) and re-uploads on its next
+  dispatch (a counted h2d). Every staged copy lands in the
+  :class:`~.arena.ShardTransferTable` — source/destination shard, shape
+  class, bytes — so the capacity claims in ``bench_serving`` are honest
+  net of transfer traffic. A per-buffer copy-set memoizes clean replicas:
+  a weight buffer read by many shards ships once per shard, not once per
+  epoch.
+
+Placement is the CAPACITY mechanism, not just a traffic optimization: a
+single interleaved window keeps re-tracing (spec subsets × shape
+signatures churn epoch to epoch), while per-chain shard placement keeps
+each shard's working set small and structurally stable — near-zero
+steady-state compiles per shard (measured in ``bench_serving``'s
+``mesh_scaling`` section) — and on multi-device hardware the per-shard
+dispatch streams additionally overlap.
+
+Bit-identity: placement only decides WHERE a task runs; ordering comes
+from program order + the same interval-hazard semantics every other
+session uses, so the differential matrix holds mesh == run_serial
+bit-exactly at any shard count, including shard counts above the device
+count (shards then share devices round-robin — the logical-shard mode the
+default 1-device test environment exercises).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .arena import ShardTransferTable
+from .buffers import Buffer
+from .device_dispatch import DeviceOpRegistry, DeviceSession
+from .executors import ExecStats
+from .scheduler import SchedulerReport
+from .scoreboard import IntervalScoreboard
+from .session import SchedulerSession
+from .task import Task, operand_base
+
+__all__ = ["MeshDeviceSession"]
+
+
+class MeshDeviceSession(SchedulerSession):
+    """A live-fed session whose window is sharded across a device mesh.
+
+    ``n_shards=None`` opens one shard per visible device (via
+    ``launch.mesh.make_window_mesh``); an explicit ``n_shards`` may exceed
+    the device count — shards then share devices round-robin, which keeps
+    the whole path testable on a single-device host. ``devices=None``
+    derives the device list from the window mesh; pass an explicit list to
+    pin shards yourself. The remaining knobs are forwarded to each
+    per-shard :class:`DeviceSession`.
+    """
+
+    def __init__(
+        self,
+        window_size: int = 32,
+        n_shards: Optional[int] = None,
+        registry: Optional[DeviceOpRegistry] = None,
+        plan_mode: str = "loop",
+        devices: Optional[Sequence[Any]] = None,
+        history_limit: Optional[int] = None,
+        loop_pallas: Optional[bool] = None,
+        plan_cache_limit: Optional[int] = 512,
+        pad_payloads: bool = False,
+    ):
+        super().__init__(window_size, history_limit=history_limit)
+        if devices is None:
+            from ..launch.mesh import make_window_mesh
+
+            devices = list(make_window_mesh().devices.flat)
+        if n_shards is None:
+            n_shards = len(devices)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        self.devices = list(devices)
+        self.registry = (registry if registry is not None
+                         else DeviceOpRegistry(strict=False))
+        self.plan_mode = plan_mode
+        self._shards: List[DeviceSession] = [
+            DeviceSession(
+                window_size=window_size,
+                registry=self.registry,
+                plan_mode=plan_mode,
+                history_limit=history_limit,
+                loop_pallas=loop_pallas,
+                plan_cache_limit=plan_cache_limit,
+                pad_payloads=pad_payloads,
+                device=self.devices[i % len(self.devices)],
+            )
+            for i in range(n_shards)
+        ]
+        # id(buffer) -> shard that last WROTE it (the owner: its slab row
+        # is authoritative while device-dirty), and -> the shard set
+        # holding a CURRENT copy (owner + shards a staged transfer already
+        # reached). A write collapses the copy set to the writer.
+        self._owner: Dict[int, int] = {}
+        self._copies: Dict[int, Set[int]] = {}
+        # id(buffer) -> shard that first READ it: read-only working sets
+        # (tenant weights, shared tables) are never written, so write
+        # ownership can't see them — the read home is what keeps a
+        # tenant's requests landing where its weights already reside.
+        self._read_home: Dict[int, int] = {}
+        # Running per-shard placement totals (the least-loaded signal).
+        self._placed: List[int] = [0] * n_shards
+        self.transfer_table = ShardTransferTable()
+        self.cross_shard_edges = 0
+        self.sub_epoch_barriers = 0
+        self.epochs = 0
+        self.placements: Dict[str, int] = {
+            "raw_upstream": 0, "hazard_upstream": 0,
+            "affinity": 0, "read_affinity": 0, "balance": 0,
+        }
+
+    # -- placement plane ---------------------------------------------------
+    def _place_epoch(self, order: List[Task]) -> Dict[int, int]:
+        """Decide every task's shard for one epoch (program order in).
+
+        Replays a fresh scoreboard over just this epoch: ``probe_writers``
+        (before the task's own insert) yields its exact same-epoch RAW
+        producers, ``insert`` the full hazard set. Returns
+        ``shard_of_tid``."""
+        sb = IntervalScoreboard()
+        pos: Dict[int, int] = {}
+        shard_of: Dict[int, int] = {}
+        for i, t in enumerate(order):
+            raw = sb.probe_writers(t.read_segments)
+            haz = sb.insert(t.tid, t.read_segments, t.write_segments)
+            pos[t.tid] = i
+            if raw:
+                latest = max(raw, key=lambda tid: pos[tid])
+                shard, reason = shard_of[latest], "raw_upstream"
+            elif haz:
+                latest = max(haz, key=lambda tid: pos[tid])
+                shard, reason = shard_of[latest], "hazard_upstream"
+            else:
+                bids = [id(operand_base(op)) for op in
+                        tuple(t.inputs) + tuple(t.outputs)]
+                owners = [self._owner[b] for b in bids if b in self._owner]
+                homes = [self._read_home[b] for b in bids
+                         if b in self._read_home]
+                if owners:
+                    # the most-represented owning shard (ties: first seen)
+                    shard = max(set(owners), key=owners.count)
+                    reason = "affinity"
+                elif homes:
+                    # read-only working-set locality (e.g. a new request
+                    # whose only live-in is its tenant's weights)
+                    shard = max(set(homes), key=homes.count)
+                    reason = "read_affinity"
+                else:
+                    shard = min(range(self.n_shards),
+                                key=lambda s: self._placed[s])
+                    reason = "balance"
+            shard_of[t.tid] = shard
+            for op in t.inputs:
+                self._read_home.setdefault(id(operand_base(op)), shard)
+            self._placed[shard] += 1
+            self.placements[reason] += 1
+        return shard_of
+
+    # -- cross-shard staging ----------------------------------------------
+    def _stage_transfers(self, task: Task, shard: int) -> None:
+        """Materialize the cross-shard edges of one task before its shard
+        dispatches: for every operand owned by another shard, the owner
+        syncs the row to the host image (d2h; no-op if already clean) and
+        this shard re-uploads on its next dispatch (h2d). Memoized per
+        (buffer, shard) through the copy set until the next write."""
+        for op in tuple(task.inputs) + tuple(task.outputs):
+            base = operand_base(op)
+            bid = id(base)
+            owner = self._owner.get(bid)
+            if owner is not None and owner != shard:
+                self.cross_shard_edges += 1
+                if shard not in self._copies.get(bid, ()):
+                    self._shards[owner].sync_buffers(
+                        [base], tags=("mesh-transfer",))
+                    self._shards[shard].mark_host_dirty(base)
+                    self.transfer_table.record(
+                        owner, shard,
+                        self._shards[owner].arena.class_of(base).label,
+                        self._shards[owner].arena.row_nbytes(base))
+                    self._copies.setdefault(bid, {owner}).add(shard)
+        for op in task.outputs:
+            bid = id(operand_base(op))
+            self._owner[bid] = shard
+            self._copies[bid] = {shard}
+
+    # -- the epoch ---------------------------------------------------------
+    def _dispatch_sub_epoch(self, sub: List[Tuple[Task, int]]) -> None:
+        """One barrier-free slice: stage its cross-shard inputs, feed each
+        shard its tasks (program order preserved per shard), drain every
+        involved shard, then retire through the outer plane.
+
+        When an outer observer watches the slice (listener, per-task
+        callback, or ticket), outer retirement rides each INNER session's
+        per-task retirement instead of firing wholesale after the drain: a
+        decode chain's callbacks must observe each intermediate slot value
+        exactly as they would under `DeviceSession` — and the inner
+        watchers this registers are what make the inner device path sync
+        values back before the callback reads them. Unwatched slices keep
+        the fast path: no per-task observation, no forced syncs, one
+        wholesale retirement sweep in program order."""
+        watched = bool(self._listeners) or any(
+            t.tid in self._watchers or t.tid in self._tickets
+            for t, _ in sub)
+        involved: List[int] = []
+        for task, shard in sub:
+            self._stage_transfers(task, shard)
+            if shard not in involved:
+                involved.append(shard)
+            if watched:
+                self._shards[shard].submit(task, on_retire=self._note_retired)
+            else:
+                self._shards[shard].submit(task)
+        self.waves.append([t.tid for t, _ in sub])
+        for shard in involved:
+            sh = self._shards[shard]
+            while sh.outstanding:
+                before = sh.outstanding
+                sh.poll()
+                if sh.outstanding == before:
+                    raise RuntimeError(
+                        f"mesh shard {shard} stalled with "
+                        f"{sh.outstanding} tasks outstanding")
+        if not watched:
+            for task, _ in sub:
+                self._note_retired(task)
+
+    def _pump(self) -> bool:
+        if self.window.idle():
+            return False
+        order = self.window.drain_program_order()
+        shard_of = self._place_epoch(order)
+        # Sub-epoch walk: cut only at cross-shard conflicts within the
+        # current slice; same-shard hazards ride the shard's own window.
+        # The conflict test is at BASE-BUFFER granularity, not hazard
+        # (segment) granularity: two tasks writing disjoint row-views of
+        # the same buffer have no hazard, but on different shards they
+        # would split row ownership of one slab allocation — each shard's
+        # copy partially fresh and the host image never whole. A barrier
+        # sequences them so the staging protocol migrates whole rows.
+        # Read-read sharing across shards stays barrier-free.
+        sub: List[Tuple[Task, int]] = []
+        readers: Dict[int, Set[int]] = {}  # id(base) -> shards reading
+        writers: Dict[int, Set[int]] = {}  # id(base) -> shards writing
+        for t in order:
+            shard = shard_of[t.tid]
+            rb = {id(operand_base(op)) for op in t.inputs}
+            wb = {id(operand_base(op)) for op in t.outputs}
+            conflict = any(s != shard
+                           for b in rb | wb
+                           for s in writers.get(b, ())) or \
+                       any(s != shard
+                           for b in wb
+                           for s in readers.get(b, ()))
+            if conflict:
+                self._dispatch_sub_epoch(sub)
+                self.sub_epoch_barriers += 1
+                sub, readers, writers = [], {}, {}
+            for b in rb:
+                readers.setdefault(b, set()).add(shard)
+            for b in wb:
+                writers.setdefault(b, set()).add(shard)
+            sub.append((t, shard))
+        if sub:
+            self._dispatch_sub_epoch(sub)
+        self.epochs += 1
+        return True
+
+    # -- retirement observation --------------------------------------------
+    def _pre_observe_retired(self, task: Task) -> None:
+        # A late observer of an already-retired task: bring every shard's
+        # image current before it reads host values.
+        for sh in self._shards:
+            sh.sync()
+
+    def shard_of(self, buf: Buffer) -> Optional[int]:
+        """The shard currently owning (last to write) ``buf``, or None if
+        no shard has written it. Serving uses this for per-device slot
+        accounting: a request slot's owner is the device its chain ran on."""
+        with self._lock:
+            return self._owner.get(id(buf))
+
+    # -- row lifecycle -----------------------------------------------------
+    def release_buffer(self, buf: Buffer) -> bool:
+        """Forward a producer's release to every shard (each holds its own
+        row when the buffer crossed shards) and drop the ownership entry.
+        True if any shard recycled a row."""
+        with self._lock:
+            freed = False
+            for sh in self._shards:
+                freed = sh.release_buffer(buf) or freed
+            self._owner.pop(id(buf), None)
+            self._copies.pop(id(buf), None)
+            self._read_home.pop(id(buf), None)
+            return freed
+
+    # -- lifecycle ---------------------------------------------------------
+    def sync(self) -> None:
+        """Force every shard's device-resident values back to host."""
+        with self._lock:
+            for sh in self._shards:
+                sh.sync()
+
+    def flush(self) -> None:
+        super().flush()
+        for sh in self._shards:
+            sh.flush()
+
+    def session_stats(self) -> Dict[str, Any]:
+        """Mesh counters + every shard's full ``session_stats()``. The
+        aggregate keys mirror `DeviceSession`'s so benchmarks can treat
+        any device-backed session uniformly; ``per_shard`` keeps the
+        honest breakdown (host_syncs per shard = the transfer audit)."""
+        with self._lock:
+            per_shard = [sh.session_stats() for sh in self._shards]
+
+            def total(key: str) -> int:
+                return sum(s[key] for s in per_shard)
+
+            return {
+                "plan_mode": "mesh",
+                "n_shards": self.n_shards,
+                "n_devices": len({id(d) for d in self.devices}),
+                "epochs": self.epochs,
+                "sub_epoch_barriers": self.sub_epoch_barriers,
+                "cross_shard_edges": self.cross_shard_edges,
+                "placements": dict(self.placements),
+                "transfers": self.transfer_table.as_dict(),
+                "device_dispatches": total("device_dispatches"),
+                "loop_dispatches": total("loop_dispatches"),
+                "host_task_dispatches": total("host_task_dispatches"),
+                "plan_cache_hits": total("plan_cache_hits"),
+                "plan_cache_misses": total("plan_cache_misses"),
+                "compiled_programs": total("compiled_programs"),
+                "host_syncs": total("host_syncs"),
+                "host_syncs_d2h": total("host_syncs_d2h"),
+                "host_syncs_h2d": total("host_syncs_h2d"),
+                "slab_bytes": total("slab_bytes"),
+                "arena_live_rows": total("arena_live_rows"),
+                "arena_free_rows": total("arena_free_rows"),
+                "arena_recycled_rows": total("arena_recycled_rows"),
+                "arena_compactions": total("arena_compactions"),
+                "dep_checks": self.window.stats.dep_checks,
+                "scoreboard_probes": self.window.stats.scoreboard_probes,
+                "per_shard": per_shard,
+            }
+
+    def _finalize(self) -> SchedulerReport:
+        wall = time.perf_counter() - self._t0
+        for sh in self._shards:
+            if not sh.closed:
+                sh.close()
+        # Aggregate exec stats across shards for the report surface.
+        stats = ExecStats()
+        for sh in self._shards:
+            stats.dispatches += sh.stats.dispatches
+            stats.tasks_run += sh.stats.tasks_run
+            stats.compiles += sh.stats.compiles
+            stats.wave_widths.extend(sh.stats.wave_widths)
+        stats.exec_seconds = wall
+        report = SchedulerReport(self.window, stats, wall, self.waves)
+        report.plan_mode = "mesh"  # type: ignore[attr-defined]
+        report.session_stats = self.session_stats()  # type: ignore[attr-defined]
+        report.arena_stats = {  # type: ignore[attr-defined]
+            "n_classes": sum(sh.arena.n_classes() for sh in self._shards),
+            "per_shard": [sh.arena.padding_waste() for sh in self._shards],
+        }
+        return report

@@ -185,7 +185,7 @@ SCHEDULER_NAMES = ("serial", "wave", "threaded", "frontier", "device")
 # device-resident window (DeviceSession): submissions accumulate in the
 # live window and drain in one-dispatch epochs over a session-lifetime
 # slab arena with a structure-keyed plan cache.
-SESSION_NAMES = ("serial", "wave", "threaded", "frontier", "device")
+SESSION_NAMES = ("serial", "wave", "threaded", "frontier", "device", "mesh")
 # Device plan lowerings. "wave"/"frontier" lower an epoch to a fixed
 # DeviceStep table (order decided on host at plan time); "loop" lowers it
 # to a device-resident ready-queue program (lax.while_loop / Pallas fast
@@ -270,4 +270,14 @@ def make_session(name: str, window_size: int = 32, num_streams: int = 4,
 
         return DeviceSession(window_size=window_size, plan_mode=plan_mode,
                              max_group=max_group, history_limit=history_limit)
+    if name == "mesh":
+        from .mesh_session import MeshDeviceSession
+
+        # The mesh session shards the window across visible devices
+        # (one shard per device by default; construct MeshDeviceSession
+        # directly for explicit n_shards / device lists). Its per-shard
+        # executors always use the ready-queue "loop" lowering, so the
+        # factory-level plan_mode — validated above — is not forwarded.
+        return MeshDeviceSession(window_size=window_size,
+                                 history_limit=history_limit)
     raise ValueError(f"unknown session {name!r}; choose from {SESSION_NAMES}")

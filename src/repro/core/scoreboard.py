@@ -223,6 +223,15 @@ class IntervalScoreboard:
         return self._probe(self._pairs(reads.coalesced()),
                            self._pairs(writes.coalesced()))
 
+    def probe_writers(self, reads: SegmentSet) -> Set[int]:
+        """RAW-only probe: active tasks whose WRITE claims overlap the given
+        read segments, without registering anything. The mesh admission
+        plane uses this to find the true data-flow upstreams of an incoming
+        task (the producers whose outputs it consumes) — the placement
+        signal — separately from the full RAW/WAR/WAW hazard set that
+        decides sub-epoch barriers."""
+        return self._probe(self._pairs(reads.coalesced()), [])
+
     def _probe(self, reads, writes) -> Set[int]:
         m = self._map
         up: Set[int] = set()

@@ -214,11 +214,20 @@ class SchedulerSession:
         else:
             iv.insert(i, [tid, tid])
 
+    def _pre_observe_retired(self, task: Task) -> None:
+        """Hook (lock held) before an observer attaches to an ALREADY
+        retired task and reads its outputs: the base sessions retire
+        host-side so values are always fresh, but device-backed sessions
+        override this to sync slab values back first — a late
+        callback/ticket holder must read host values as fresh as an early
+        one's."""
+
     def on_task_retired(self, task: Task, cb: RetireCallback) -> None:
         """Per-task completion callback; fires immediately if the task has
         already retired."""
         with self._lock:
             if self._is_retired(task.tid):
+                self._pre_observe_retired(task)
                 fire_now = True
             else:
                 self._watchers.setdefault(task.tid, []).append(cb)
@@ -233,6 +242,7 @@ class SchedulerSession:
             if tk is None:
                 tk = TaskTicket(task)
                 if self._is_retired(task.tid):
+                    self._pre_observe_retired(task)
                     tk._event.set()
                 else:
                     self._tickets[task.tid] = tk

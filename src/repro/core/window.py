@@ -212,6 +212,27 @@ class SchedulingWindow:
         this BEFORE retiring — the slot is destroyed at retire."""
         return self.slots[tid].seq
 
+    def drain_program_order(self) -> List[Task]:
+        """Drain everything admitted so far (retire-and-refill waves) and
+        return the tasks in PROGRAM order. The ready-queue epoch lowering
+        and the mesh placement plane both need a topological order, and
+        program order guarantees every dependency edge points forward;
+        each task's insertion seq is captured before its slot is destroyed
+        at retire. Raises on a stalled window (READY empty but residents
+        remain) — impossible under program-order admission."""
+        drained: List[Tuple[int, Task]] = []
+        while not self.idle():
+            ready = self.ready_tasks()
+            if not ready:
+                raise RuntimeError(
+                    "window stall: no READY kernels but window non-empty")
+            for t in ready:
+                self.mark_executing(t)
+                drained.append((self.seq_of(t.tid), t))
+            self.retire_many(ready)
+        drained.sort(key=lambda p: p[0])
+        return [t for _, t in drained]
+
     # -- internals ----------------------------------------------------------
     def _retire_no_fill(self, task: Task) -> None:
         slot = self.slots.get(task.tid)

@@ -1,16 +1,19 @@
-"""Production mesh definition.
+"""Mesh definitions — training pods AND the sharded scheduling window.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state: the dry-run must set
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+Every factory here is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state: dry-runs and the
+mesh-window tests must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before first
 device use, and smoke tests must keep seeing 1 device.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_window_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -21,6 +24,29 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_local_mesh() -> jax.sharding.Mesh:
-    """Degenerate 1x1 mesh over whatever devices exist (tests/examples)."""
+    """All local devices on a 1-D ``data`` axis (tests/examples).
+
+    Previously ``(n, 1)`` over ``("data", "model")`` — the trailing
+    unit ``model`` axis hid the actual device count from consumers that
+    factorize the mesh by axis shape, and window sharding wants the flat
+    device list. ``parallel.sharding`` treats a missing ``model`` axis as
+    tensor-parallel degree 1, so training specs are unaffected.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    return jax.make_mesh((n,), ("data",))
+
+
+def make_window_mesh(n: Optional[int] = None) -> jax.sharding.Mesh:
+    """The scheduling-window mesh: ``n`` devices on a 1-D ``"window"``
+    axis, each owning one slab-arena shard of a mesh-sharded
+    :class:`~repro.core.mesh_session.MeshDeviceSession`. ``n=None`` takes
+    every visible device (under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` that is the
+    forced host-device count — the dev/CI path)."""
+    devs = jax.devices()
+    if n is None:
+        n = len(devs)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"window mesh wants {n} devices but {len(devs)} are visible")
+    return jax.sharding.Mesh(devs[:n], ("window",))

@@ -336,15 +336,25 @@ class SessionServer(_ServingCore):
     epoch executor that advances each dependency frontier in one dispatch
     (DESIGN §2 A3); pass ``plan_mode="wave"``/``"frontier"`` to serve
     through the fixed-step table lowering instead.
+
+    ``scheduler="mesh"`` serves through the mesh-sharded window
+    (:class:`~..core.mesh_session.MeshDeviceSession`): the global
+    admission plane places each request's chain on one shard (its slot
+    buffer's RAW chain pins it there) while independent requests spread
+    across shards/devices; ``n_shards`` defaults to the visible device
+    count. Per-device slot accounting rides the pump: every iteration
+    samples which shard owns each active slot (``shard_occupancy``), and
+    the rolling ``shard_slot_samples`` trace plus the session's
+    cross-shard/transfer counters land in the close report.
     """
 
-    SCHEDULERS = ("frontier", "wave", "device")
+    SCHEDULERS = ("frontier", "wave", "device", "mesh")
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 64, window: int = 32, max_queue: int = 256,
                  scheduler: str = "frontier", max_inflight: int = 8,
                  history_limit: Optional[int] = 1024,
-                 plan_mode: str = "loop"):
+                 plan_mode: str = "loop", n_shards: Optional[int] = None):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
                          max_queue=max_queue, history_limit=history_limit)
         if scheduler == "frontier":
@@ -371,6 +381,15 @@ class SessionServer(_ServingCore):
             # for recycling — the device session's slabs stay bounded under
             # unbounded request streams.
             self.pool.add_free_hook(self.session.release_buffer)
+        elif scheduler == "mesh":
+            from ..core.mesh_session import MeshDeviceSession
+
+            self.session = MeshDeviceSession(window_size=window,
+                                             n_shards=n_shards,
+                                             history_limit=history_limit)
+            # Same row-lifecycle wiring as "device", fanned out to every
+            # shard's arena (a freed buffer may hold rows on several).
+            self.pool.add_free_hook(self.session.release_buffer)
         else:
             raise ValueError(
                 f"session server scheduler must be one of {self.SCHEDULERS}, "
@@ -383,6 +402,11 @@ class SessionServer(_ServingCore):
         # the rolling report_log, not here).
         self.task_kinds: Dict[int, str] = {}
         self.occupancy_samples: Deque[int] = collections.deque(
+            maxlen=history_limit)
+        # mesh only: rolling per-device slot-occupancy trace, one
+        # {shard: active slot count} sample per pump (bounded like every
+        # other monitoring surface — soak-safe).
+        self.shard_slot_samples: Deque[Dict[int, int]] = collections.deque(
             maxlen=history_limit)
 
     # -- retirement callbacks (fire inside session.poll/drive) --------------
@@ -452,8 +476,25 @@ class SessionServer(_ServingCore):
             while self.queue and self.free:
                 self._admit(self._pick_next())
             self.occupancy_samples.append(self.session.window.resident())
+            if self.scheduler_name == "mesh":
+                self.shard_slot_samples.append(self.shard_occupancy())
         out, self._finished = self._finished, []
         return out
+
+    def shard_occupancy(self) -> Dict[int, int]:
+        """Per-device slot accounting (mesh scheduler): how many ACTIVE
+        request slots each shard currently owns — a slot is attributed to
+        the shard that last wrote its buffer, i.e. where its chain runs.
+        Slots whose chain has not executed yet are not attributed."""
+        counts: Dict[int, int] = {}
+        shard_of = getattr(self.session, "shard_of", None)
+        if shard_of is None:
+            return counts
+        for s in self.active:
+            shard = shard_of(self.slots[s])
+            if shard is not None:
+                counts[shard] = counts.get(shard, 0) + 1
+        return counts
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
         """Serve until queue and slots empty (blocking between pumps only
@@ -478,5 +519,12 @@ class SessionServer(_ServingCore):
             float(np.mean(self.occupancy_samples)) if self.occupancy_samples else 0.0)
         if hasattr(report, "session_stats"):  # device session epoch counters
             entry["device_session"] = dict(report.session_stats)
+        if self.shard_slot_samples:  # mesh per-device slot accounting
+            shards: Dict[int, List[int]] = {}
+            for sample in self.shard_slot_samples:
+                for shard, n in sample.items():
+                    shards.setdefault(shard, []).append(n)
+            entry["shard_slots_mean"] = {
+                str(shard): float(np.mean(v)) for shard, v in sorted(shards.items())}
         self.report_log.append(entry)
         return report

@@ -22,6 +22,7 @@ from repro.core import (
     TaskStream,
     make_scheduler,
     pad_shape,
+    row_capacity,
     run_serial,
 )
 from repro.core.task import default_segments
@@ -57,7 +58,9 @@ class TestSlabArena:
         assert ca == cb and ra != rb
         assert arena.n_classes() == 1
         slabs = arena.pack()
-        assert slabs[0].shape == (2, 8)  # one row per buffer, no scratch
+        # one row per buffer, physical capacity quantized (row_capacity)
+        assert slabs[0].shape == (row_capacity(2), 8)
+        assert len(arena.rows(0)) == 2
         arena.unpack(slabs)
         np.testing.assert_array_equal(np.asarray(a.value), np.arange(5, dtype=np.float32))
         np.testing.assert_array_equal(np.asarray(b.value), np.arange(7, dtype=np.float32))
@@ -354,7 +357,8 @@ class TestRowLifecycle:
         c = pool.alloc((6,), np.float32, value=jnp.full(6, 42.0))
         cid, row = arena.add(c)
         slabs = arena.pack_incremental(slabs)
-        assert slabs[cid].shape[0] == 2
+        assert slabs[cid].shape[0] == row_capacity(2)
+        assert len(arena.rows(cid)) == 2
         np.testing.assert_array_equal(np.asarray(slabs[cid][row][:6]),
                                       np.full(6, 42.0, np.float32))
 
@@ -421,7 +425,7 @@ class TestRowLifecycle:
         assert moved == {0: {1: 0, 3: 1, 5: 2}}
         assert arena.generation == 1 and arena.class_generation(0) == 1
         assert arena.compactions == 1
-        assert slabs[0].shape[0] == 3 and len(arena.rows(0)) == 3
+        assert slabs[0].shape[0] == row_capacity(3) and len(arena.rows(0)) == 3
         assert arena.free_rows() == 0
         for b in (bufs[1], bufs[3], bufs[5]):
             cid, row = arena.add(b)  # idempotent lookup of the new address

@@ -254,6 +254,78 @@ def test_committed_bench_depcheck_json():
     _assert_depcheck_gates(payload)
 
 
+# Structural gates the committed serving artifact must hold: the live
+# session beats continuous batching on p95, and the mesh-sharded window
+# leg (DESIGN §12) sustains >=2.5x single-window capacity at equal-or-
+# better tail latency, with the win attributable to retrace elimination.
+MESH_GATES = ("mesh_n4_beats_single_2p5x", "mesh_n4_p95_within_single",
+              "mesh_n4_fewer_compiles")
+
+
+def _assert_serving_gates(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    assert metrics.get(("serving", "session_beats_batch_p95")) == 1, (
+        f"serving p95 gate failed: "
+        f"{ {m: v for (s, m), v in metrics.items() if s == 'serving'} }")
+    for gate in MESH_GATES:
+        assert metrics.get(("mesh_scaling", gate)) == 1, (
+            f"mesh gate {gate!r} failed: "
+            f"{ {m: v for (s, m), v in metrics.items() if s == 'mesh_scaling'} }")
+    # the evidence behind the verdicts: capacity ratio, cross-device edge
+    # count, and per-shard host-sync accounting must all be carried
+    assert metrics[("mesh_scaling", "mesh_n4_capacity_ratio")] >= 2.5
+    assert ("mesh_scaling", "cross_shard_edges") in metrics
+    assert ("mesh_scaling", "sub_epoch_barriers") in metrics
+    assert metrics[("mesh_scaling", "n_devices")] >= 1
+    for i in range(4):
+        assert ("mesh_scaling", f"shard{i}_host_syncs") in metrics
+        assert ("mesh_scaling", f"shard{i}_compiled_programs") in metrics
+
+
+def test_committed_bench_serving_json():
+    """The repo-root BENCH_serving.json (regenerated by the CI multi-device
+    lane under forced host devices) must stay schema-valid with the
+    serving-p95 and mesh-scaling gates green."""
+    path = os.path.join(REPO_ROOT, "BENCH_serving.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=["serving", "mesh_scaling"])
+    assert payload["sections"] == ["serving", "mesh_scaling"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_serving_gates(payload)
+
+
+def _assert_window_size_metrics(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    # the full window sweep must be present for the smoke env/net pair,
+    # with the scoreboard evidence columns (probes vs budgeted checks)
+    from benchmarks.bench_window_size import WINDOWS
+
+    for name in ("ant", "instanas"):
+        for w in WINDOWS:
+            for col in ("plan_us_per_task", "probes_per_insert",
+                        "checks_per_insert"):
+                assert ("fig29_window", f"{name}_w{w}_{col}") in metrics, (
+                    f"missing fig29_window,{name}_w{w}_{col}")
+        assert ("fig29_window", f"{name}_w256_pairwise_us_per_task") in metrics
+    assert ("fig29_window", "sim_mean_gain") in metrics
+    assert ("fig29_window", "sim_mean_gain_w256") in metrics
+
+
+def test_committed_bench_window_size_json():
+    """The repo-root BENCH_window_size.json must stay schema-valid and
+    keep carrying the large-window scoreboard evidence columns."""
+    path = os.path.join(REPO_ROOT, "BENCH_window_size.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=_emitted_names(["window_size"]))
+    assert payload["sections"] == ["window_size"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_window_size_metrics(payload)
+
+
 # -- benchmarks/compare.py: the committed-vs-fresh trajectory driver -------
 
 def _payload(rows):

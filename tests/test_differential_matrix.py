@@ -350,3 +350,138 @@ class TestCompactionEpochEquivalence:
         np.testing.assert_array_equal(got, ref)
         assert dev.arena.compactions >= 1, "compaction epoch never happened"
         assert dev.session_stats()["plan_cache_invalidations"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded window (DESIGN §12): the registry entry covers the default
+# shard count above; here the shard axis is explicit — 1/2/4 logical
+# shards must stay bit-identical to serial on every stream family (the
+# admission plane may only move provably independent work between shards),
+# the placement policy must obey its own RAW rule, and a subprocess leg
+# forces REAL multiple host devices (XLA fixes the device count at first
+# use, so it can't be varied in-process).
+# ---------------------------------------------------------------------------
+
+class TestMeshMatrix:
+    @pytest.mark.parametrize("stream_name", sorted(STREAMS))
+    @pytest.mark.parametrize("n_shards", [1, 2, 4])
+    def test_interleaved_feed_matches_serial(self, n_shards, stream_name):
+        from repro.core import MeshDeviceSession
+
+        ref = _ref(stream_name)
+        snap, tasks = STREAMS[stream_name]()
+        session = MeshDeviceSession(window_size=WINDOW, n_shards=n_shards)
+        rng = np.random.RandomState(13)
+        i = 0
+        while i < len(tasks):
+            k = 1 + rng.randint(6)
+            session.submit(tasks[i: i + k])
+            i += k
+            if rng.rand() < 0.6:
+                session.poll()
+        report = session.close()
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.window_stats["retired"] == len(tasks)
+        stats = session.session_stats()
+        assert stats["plan_mode"] == "mesh"
+        assert stats["n_shards"] == n_shards
+        assert len(stats["per_shard"]) == n_shards
+        if n_shards == 1:
+            # one shard can never stage a cross-shard edge
+            assert stats["cross_shard_edges"] == 0
+
+    def test_placement_respects_same_epoch_raw_upstream(self):
+        """Placement property: a task whose reads RAW-depend on a writer
+        placed in the SAME admission epoch must land on one of those
+        writers' shards — dependent chains never split across devices."""
+        from repro.core import MeshDeviceSession
+        from repro.core.scoreboard import IntervalScoreboard
+
+        snap, tasks = STREAMS["mixed_tag"]()
+        session = MeshDeviceSession(window_size=WINDOW, n_shards=4)
+        checked = []
+        orig = session._place_epoch
+
+        def spy(order):
+            shard_of = orig(order)
+            sb = IntervalScoreboard()
+            for t in order:
+                raw = sb.probe_writers(t.read_segments)
+                sb.insert(t.tid, t.read_segments, t.write_segments)
+                same_epoch = [u for u in raw if u in shard_of and u != t.tid]
+                if same_epoch:
+                    checked.append((t.tid, shard_of[t.tid],
+                                    {shard_of[u] for u in same_epoch}))
+            return shard_of
+
+        session._place_epoch = spy
+        session.submit(tasks)
+        session.close()
+        assert checked, "stream produced no same-epoch RAW pairs"
+        for tid, shard, upstream_shards in checked:
+            assert shard in upstream_shards, (
+                f"task {tid} placed on shard {shard}, RAW upstreams on "
+                f"{sorted(upstream_shards)}")
+
+    @pytest.mark.parametrize("n_dev", [2, 4])
+    def test_forced_multi_device_matches_serial(self, n_dev, tmp_path):
+        """Real per-device shards: a subprocess forces N host platform
+        devices, runs the hazard-heavy stream through a mesh with one
+        shard per device, and must reproduce the serial snapshot exactly."""
+        import os
+        import subprocess
+        import sys as _sys
+
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        script = f"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import BufferPool, MeshDeviceSession, run_serial, TaskStream
+from repro.core.wrapper import AcsKernel
+from repro.kernels.ops import LOOP_BRANCHES
+
+assert len(jax.devices()) == {n_dev}, jax.devices()
+D = 4
+
+def build(seed):
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    bufs = [pool.alloc((D,), np.float32,
+                       value=jnp.asarray(rng.randn(D).astype(np.float32)))
+            for _ in range(6)]
+    kern = {{"axpy": AcsKernel(name="axpy_fd", fn=LOOP_BRANCHES["axpy"]),
+             "mul": AcsKernel(name="mul_fd", fn=LOOP_BRANCHES["mul"])}}
+    stream = TaskStream()
+    tasks = []
+    for _ in range(24):
+        k = kern["axpy" if rng.rand() < 0.5 else "mul"]
+        ins = (bufs[rng.randint(6)], bufs[rng.randint(6)])
+        outs = (bufs[rng.randint(6)],)
+        tasks.append(k.launch(stream, inputs=ins, outputs=outs))
+    return bufs, tasks
+
+bufs, tasks = build(3)
+run_serial(tasks)
+ref = np.stack([np.asarray(b.value) for b in bufs])
+
+bufs, tasks = build(3)
+sess = MeshDeviceSession(window_size=16, n_shards={n_dev})
+sess.submit(tasks)
+sess.close()
+got = np.stack([np.asarray(b.value) for b in bufs])
+np.testing.assert_array_equal(got, ref)
+stats = sess.session_stats()
+assert stats["n_devices"] == {n_dev}, stats["n_devices"]
+assert stats["n_shards"] == {n_dev}
+print("MESH_FORCED_OK", stats["cross_shard_edges"],
+      stats["sub_epoch_barriers"])
+"""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev}")
+        env["PYTHONPATH"] = os.path.join(repo, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        proc = subprocess.run([_sys.executable, "-c", script], cwd=repo,
+                              env=env, capture_output=True, text=True,
+                              timeout=150)
+        assert proc.returncode == 0, (proc.stdout + proc.stderr)[-2000:]
+        assert "MESH_FORCED_OK" in proc.stdout

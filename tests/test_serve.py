@@ -80,6 +80,36 @@ class TestSessionServer:
         server.close()
         assert _no_prompt_buffers(server.pool)
 
+    @pytest.mark.parametrize("n_shards", [1, 2])
+    def test_mesh_tokens_identical_to_frontier(self, tiny_cfg, tiny_params,
+                                               n_shards):
+        """Serving through the mesh-sharded window (DESIGN §12): token
+        sequences must match the frontier session's exactly — decode-chain
+        retirement callbacks must observe each intermediate slot value
+        even when a whole chain drains inside one sub-epoch — and the
+        close stats must carry the per-shard slot-occupancy samples."""
+        prompts = _prompts(tiny_cfg, 4, seed=2)
+        ref_server = SessionServer(tiny_cfg, tiny_params, max_slots=2,
+                                   max_len=32, scheduler="frontier")
+        for p in prompts:
+            ref_server.submit(p, max_new=3)
+        ref = {tuple(r.prompt): r.generated
+               for r in ref_server.run_until_drained()}
+        ref_server.close()
+
+        mesh = SessionServer(tiny_cfg, tiny_params, max_slots=2, max_len=32,
+                             scheduler="mesh", n_shards=n_shards)
+        for p in prompts:
+            mesh.submit(p, max_new=3)
+        got = {tuple(r.prompt): r.generated
+               for r in mesh.run_until_drained()}
+        mesh.close()
+        entry = mesh.report_log[-1]
+        assert got == ref
+        assert _no_prompt_buffers(mesh.pool)
+        assert entry["shard_slots_mean"], entry
+        assert all(v >= 0 for v in entry["shard_slots_mean"].values())
+
     def test_coscheduling_prefill_with_inflight_decode(self, tiny_cfg, tiny_params):
         """A request arriving mid-decode shares a wave with the in-flight
         decode (wave) — admission into the LIVE window, not a fresh drain."""
