@@ -29,6 +29,7 @@ from . import (
     bench_mesh_scaling,
     bench_moe_waves,
     bench_occupancy,
+    bench_qos,
     bench_rl_e2e,
     bench_serving,
     bench_sim_speedup,
@@ -53,6 +54,7 @@ SECTIONS = {
     "serving": bench_serving,            # live sessions (DESIGN §10)
     "soak": bench_soak,                  # lifetime invariants (DESIGN §2 A3)
     "mesh_scaling": bench_mesh_scaling,  # mesh-sharded window (DESIGN §12)
+    "qos": bench_qos,                    # multi-tenant QoS plane (DESIGN §13)
 }
 
 # The sections --smoke runs when none are named: the ones exercising plan
@@ -61,7 +63,7 @@ SECTIONS = {
 # window_size's window=256 leg over the real sim/dyn streams) — so
 # regressions there fail in CI, not at bench time.
 SMOKE_SECTIONS = ("depcheck", "device", "frontier", "serving",
-                  "window_size", "mesh_scaling")
+                  "window_size", "mesh_scaling", "qos")
 
 
 def main() -> None:

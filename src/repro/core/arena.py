@@ -63,6 +63,22 @@ __all__ = ["ShapeClass", "ArenaAddress", "SlabArena", "ShardTransferTable",
            "pad_shape", "row_capacity"]
 
 
+def _commit_like(val: Any, slab: Any) -> Any:
+    """Place ``val`` on the device ``slab`` is committed to. A persistent
+    slab pinned to a non-default device (mesh shards pin each shard's
+    session) must not be updated with values committed elsewhere: a
+    buffer written by one shard's dispatch holds an array committed to
+    THAT shard's device, and scattering it into another shard's slab
+    raises jax's incompatible-devices error. Uncommitted slabs (single
+    device, plain host sessions) pass through untouched."""
+    if getattr(slab, "committed", False):
+        import jax
+
+        (dev,) = slab.devices()
+        return jax.device_put(val, dev)
+    return val
+
+
 def row_capacity(n_rows: int) -> int:
     """Physical slab rows for ``n_rows`` logical rows: the next power of
     two (floored at 8). Slab shapes are jit trace signatures — an
@@ -500,7 +516,8 @@ class SlabArena:
                             [out[cid],
                              jnp.zeros((new_cap - cap,) + cls.padded_shape,
                                        dtype)])
-                    out[cid] = out[cid].at[packed:total].set(fresh)
+                    out[cid] = out[cid].at[packed:total].set(
+                        _commit_like(fresh, out[cid]))
                 else:
                     cap = row_capacity(total)
                     slab = jnp.zeros((cap,) + cls.padded_shape, dtype)
@@ -513,7 +530,8 @@ class SlabArena:
                 vals = jnp.stack(
                     [self._row_value(self._rows[cid][r], cls) for r in rows]
                 ).astype(dtype)
-                out[cid] = out[cid].at[jnp.asarray(rows, dtype=jnp.int32)].set(vals)
+                out[cid] = out[cid].at[jnp.asarray(rows, dtype=jnp.int32)].set(
+                    _commit_like(vals, out[cid]))
                 self._reused[cid].clear()
         return out
 
@@ -526,7 +544,8 @@ class SlabArena:
         for buf in buffers:
             cid, row = self._addr[id(buf)]
             val = self._padded_value(buf, self._classes[cid])
-            out[cid] = out[cid].at[row].set(val.astype(out[cid].dtype))
+            out[cid] = out[cid].at[row].set(
+                _commit_like(val.astype(out[cid].dtype), out[cid]))
         return out
 
     def unpack(self, slabs: Sequence[Any],

@@ -1367,7 +1367,17 @@ class DeviceSession(SchedulerSession):
         by construction: upstream sets were resolved incrementally by the
         scoreboard at submit time, and each retire-and-refill here costs
         O(own segments + out-degree), not a window rescan — so epoch
-        planning at window 256 does not melt the admission path."""
+        planning at window 256 does not melt the admission path.
+
+        QoS threading (DESIGN §13): ``ready_tasks()`` is priority-
+        bucketed, so each planning step's frontier opens with the most
+        urgent READY kernels — frontier-mode epochs pick their leading
+        signature group from the urgent end, wave-mode fronts list
+        urgent work first. ``plan_mode="loop"`` epochs are unaffected:
+        they drain via ``drain_program_order()`` (seq-sorted, priority-
+        oblivious), keeping the §2-A3 loop lowering program-order-
+        correct — on-device, the ready ring still discovers whatever
+        concurrency exists regardless of class."""
         plan: List[List[Task]] = []
         while not self.window.idle():
             ready = self.window.ready_tasks()

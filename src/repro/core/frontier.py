@@ -200,6 +200,10 @@ class FrontierSession(SchedulerSession):
 
         # 3. Stage the next groups from the current READY set (coalescing
         #    batchable siblings), 4. flip the double buffer when drained.
+        #    ready_tasks() yields urgent priority buckets first (DESIGN
+        #    §13), so staging order — hence group open order and launch
+        #    order — serves high-priority kernels ahead of independent
+        #    lower-priority peers with no frontier-side logic.
         self.queue.stage(self.window.ready_tasks())
         if self.queue.flip(ex):
             progressed = True

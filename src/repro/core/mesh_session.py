@@ -25,7 +25,12 @@ live window across a JAX device mesh (``launch.mesh.make_window_mesh``):
      task's operand buffers — this keeps a decode chain whose epochs
      arrive one step at a time on its device without any same-epoch
      edge;
-  4. else the least-loaded shard (new independent chains spread out).
+  4. else **priority-aware balance**: the shard with the least resident
+     equal-or-more-urgent work for the task's priority bucket, total
+     load as tie-break (new independent chains spread out; urgent
+     chains additionally avoid piling onto a shard already busy with
+     urgent work — DESIGN §13). With one priority class this is exactly
+     least-loaded.
 
 * within an epoch, tasks stream to their shards in **sub-epochs**: the
   plane walks program order and cuts a barrier only when a task touches a
@@ -141,8 +146,16 @@ class MeshDeviceSession(SchedulerSession):
         # ownership can't see them — the read home is what keeps a
         # tenant's requests landing where its weights already reside.
         self._read_home: Dict[int, int] = {}
-        # Running per-shard placement totals (the least-loaded signal).
+        # Running per-shard placement totals (the least-loaded signal),
+        # plus per-shard totals broken down by priority bucket: the
+        # balance branch prefers the shard with the least equal-or-more-
+        # urgent work for the incoming task's bucket — priority beats
+        # raw least-loaded on tie (DESIGN §13) — with the plain total as
+        # tie-break so the single-class default reduces exactly to the
+        # old least-loaded rule.
         self._placed: List[int] = [0] * n_shards
+        self._placed_by_bucket: List[Dict[int, int]] = [
+            {} for _ in range(n_shards)]
         self.transfer_table = ShardTransferTable()
         self.cross_shard_edges = 0
         self.sub_epoch_barriers = 0
@@ -189,13 +202,27 @@ class MeshDeviceSession(SchedulerSession):
                     shard = max(set(homes), key=homes.count)
                     reason = "read_affinity"
                 else:
-                    shard = min(range(self.n_shards),
-                                key=lambda s: self._placed[s])
+                    # Priority-aware balance: least resident urgency for
+                    # this task's bucket first (so a high-priority chain
+                    # lands away from other urgent work even when raw
+                    # totals tie), total load second, shard index last.
+                    # Single-class default: both components equal the old
+                    # least-loaded count — placement unchanged.
+                    bucket = t.priority
+                    shard = min(
+                        range(self.n_shards),
+                        key=lambda s: (
+                            sum(c for b, c in
+                                self._placed_by_bucket[s].items()
+                                if b <= bucket),
+                            self._placed[s], s))
                     reason = "balance"
             shard_of[t.tid] = shard
             for op in t.inputs:
                 self._read_home.setdefault(id(operand_base(op)), shard)
             self._placed[shard] += 1
+            by_bucket = self._placed_by_bucket[shard]
+            by_bucket[t.priority] = by_bucket.get(t.priority, 0) + 1
             self.placements[reason] += 1
         return shard_of
 

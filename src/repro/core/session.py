@@ -348,6 +348,8 @@ class WaveSession(SchedulerSession):
         if not ready:
             return False
         if self.max_wave is not None:
+            # ready_tasks() is priority-bucketed (DESIGN §13): a capped
+            # wave takes the most urgent READY kernels first.
             ready = ready[: self.max_wave]
         for t in ready:
             self.window.mark_executing(t)

@@ -69,6 +69,12 @@ class Task:
     # Tag of the TaskStream that pushed this task (live sessions: per-tenant
     # / per-request accounting). Not part of the signature.
     stream_tag: Optional[str] = None
+    # QoS class: lower = more urgent (0 = highest). Only a *scheduling
+    # hint* — it buckets the window's READY index so urgent work launches
+    # first among provably independent kernels; it never reorders
+    # dependent work and is not part of the signature (a compiled wave
+    # program serves every priority class).
+    priority: int = 1
 
     @property
     def signature(self) -> Tuple:

@@ -45,11 +45,21 @@ Ready-set maintenance is **incremental** (DESIGN.md §9): each slot keeps
 its upstream tid set AND the window keeps the reverse adjacency
 (tid -> dependent tids), so a retire touches only the retiree's true
 downstreams — O(out-degree) — instead of rescanning every resident slot.
-The READY index is a sorted list of (insertion seq, tid): fresh inserts
-append (their seq is the global max) and a woken dependent — whose seq
-may be older than a task inserted READY after it — bisects in, so
-``ready_tasks()`` reports oldest-first program order without re-sorting
-on every poll.
+The READY index is a sorted list of (priority bucket, insertion seq,
+tid) — DESIGN §13. Within a bucket the ordering is exactly the old
+(seq, tid) program order, so schedulers that consume ``ready_tasks()``
+in order launch urgent work first WITHOUT perturbing relative order
+inside a class: with a single priority class (the default) the index is
+bit-identical to the pre-QoS one. Fresh inserts bisect in (a
+high-priority insert may jump ahead of lower buckets; within its own
+bucket its seq is the global max so it lands last), and a woken
+dependent — whose seq may be older than a task inserted READY after it
+— bisects into its bucket. ``ready_tasks()`` stays a plain O(R) read
+with no per-poll sort. Priority only reorders *provably independent*
+kernels (everything in READY is dependency-free by construction), so it
+can never violate a hazard; consumers that need strict program order
+(the §2-A3 loop lowering, mesh placement) use ``drain_program_order()``
+which re-sorts by seq and is priority-oblivious.
 """
 
 from __future__ import annotations
@@ -72,13 +82,17 @@ class TaskState(enum.Enum):
 
 
 class _Slot:
-    __slots__ = ("task", "upstream", "state", "seq")
+    __slots__ = ("task", "upstream", "state", "seq", "priority")
 
     def __init__(self, task: Task, upstream: set, state: TaskState, seq: int):
         self.task = task
         self.upstream = upstream  # set of tids this task waits on
         self.state = state
         self.seq = seq  # monotone insertion index (== program order)
+        # READY-index bucket, captured at insertion so the key used to
+        # bisect into _ready is identical to the one used to delete from
+        # it even if task.priority is mutated while resident.
+        self.priority = task.priority
 
 
 class WindowStats:
@@ -129,11 +143,11 @@ class SchedulingWindow:
         # dependents. Maintained at insertion; consumed at retire so the
         # upstream update is O(out-degree), not O(window).
         self._downstream: Dict[int, Set[int]] = {}
-        # READY slots as a sorted list of (seq, tid): kept ordered
-        # incrementally (fresh inserts carry the max seq and append; a
-        # woken dependent bisects into place), so ready_tasks() is a
-        # plain O(R) read in program order — no per-poll sort.
-        self._ready: List[Tuple[int, int]] = []
+        # READY slots as a sorted list of (priority, seq, tid): kept
+        # ordered incrementally (inserts and wakes bisect into place), so
+        # ready_tasks() is a plain O(R) read — urgent buckets first,
+        # program order within a bucket — with no per-poll sort.
+        self._ready: List[Tuple[int, int, int]] = []
 
     # -- producer side ----------------------------------------------------
     def submit(self, task: Task) -> None:
@@ -170,15 +184,16 @@ class SchedulingWindow:
 
     # -- scheduler side ---------------------------------------------------
     def ready_tasks(self) -> List[Task]:
-        """All READY kernels, oldest-first (they may launch concurrently)."""
-        return [self.slots[tid].task for _, tid in self._ready]
+        """All READY kernels (they may launch concurrently): most urgent
+        priority bucket first, oldest-first within a bucket."""
+        return [self.slots[tid].task for _, _, tid in self._ready]
 
     def mark_executing(self, task: Task) -> None:
         slot = self.slots[task.tid]
         if slot.state is not TaskState.READY:
             raise RuntimeError(f"task {task.tid} launched while {slot.state}")
         slot.state = TaskState.EXECUTING
-        idx = bisect.bisect_left(self._ready, (slot.seq, task.tid))
+        idx = bisect.bisect_left(self._ready, (slot.priority, slot.seq, task.tid))
         del self._ready[idx]
 
     def retire(self, task: Task) -> None:
@@ -247,7 +262,7 @@ class SchedulingWindow:
             dep.upstream.discard(task.tid)
             if not dep.upstream and dep.state is TaskState.PENDING:
                 dep.state = TaskState.READY
-                bisect.insort(self._ready, (dep.seq, dep_tid))
+                bisect.insort(self._ready, (dep.priority, dep.seq, dep_tid))
         self.stats.retired += 1
 
     def _fill(self) -> None:
@@ -269,7 +284,14 @@ class SchedulingWindow:
             self._seq += 1
             self.slots[task.tid] = slot
             if state is TaskState.READY:
-                # fresh insert: seq is the global max, so append keeps order
-                self._ready.append((slot.seq, task.tid))
+                # Fresh insert: within its own bucket seq is the global
+                # max, but a more-urgent bucket must jump ahead of every
+                # lower one — append when it sorts last (the common
+                # single-class case), bisect otherwise.
+                entry = (slot.priority, slot.seq, task.tid)
+                if not self._ready or entry > self._ready[-1]:
+                    self._ready.append(entry)
+                else:
+                    bisect.insort(self._ready, entry)
             self.stats.inserted += 1
             self.stats.max_resident = max(self.stats.max_resident, len(self.slots))

@@ -149,12 +149,17 @@ class TaskStream:
     persistent decode stream would otherwise hold every Task it ever
     pushed, with its buffer references and closures, for the process
     lifetime). The sink is then the only consumer.
+
+    ``priority`` stamps each pushed task's QoS class (lower = more
+    urgent; DESIGN §13). Like ``tag`` it is pure metadata: it buckets the
+    window's READY index but never enters the task signature.
     """
 
     def __init__(self, sink: Optional[Any] = None, tag: Optional[str] = None,
-                 record: bool = True) -> None:
+                 record: bool = True, priority: Optional[int] = None) -> None:
         self.tasks: List[Task] = []
         self.tag = tag
+        self.priority = priority
         self._record = record
         self._subscribers: List[Callable[[Task], Any]] = []
         if sink is not None:
@@ -171,6 +176,8 @@ class TaskStream:
     def push(self, task: Task) -> None:
         if self.tag is not None:
             task.stream_tag = self.tag
+        if self.priority is not None:
+            task.priority = self.priority
         if self._record:
             self.tasks.append(task)
         for fn in self._subscribers:

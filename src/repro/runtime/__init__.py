@@ -1,12 +1,17 @@
 """Runtime loops: fault-tolerant training, ACS-scheduled serving."""
 
 from .serve import (
+    PRIORITY_HIGH,
+    PRIORITY_LOW,
+    PRIORITY_NORMAL,
     AdmissionQueueFull,
     ContinuousBatchingServer,
+    DrainTimeout,
     Request,
     SessionServer,
 )
 from .train import Trainer, TrainerConfig
 
 __all__ = ["Trainer", "TrainerConfig", "ContinuousBatchingServer",
-           "SessionServer", "AdmissionQueueFull", "Request"]
+           "SessionServer", "AdmissionQueueFull", "DrainTimeout", "Request",
+           "PRIORITY_HIGH", "PRIORITY_NORMAL", "PRIORITY_LOW"]

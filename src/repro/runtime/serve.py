@@ -28,12 +28,28 @@ Two servers share the slot/admission machinery (:class:`_ServingCore`):
   for its API stability and as the latency baseline ``bench_serving.py``
   measures the session server against.
 
-Both apply multi-tenant fairness (admit for the tenant with the fewest
-active slots, oldest-first tie-break) and backpressure (bounded admission
-FIFO; ``submit`` raises :class:`AdmissionQueueFull` at capacity and stamps
-the observed queue depth on the request), and both free each request's
-prompt buffer once its prefill has retired — a long-running server cannot
-leak one ``req{rid}_prompt`` allocation per request.
+Both apply multi-tenant QoS admission (DESIGN.md §13): requests carry a
+priority class (lower = more urgent) and an optional relative deadline;
+tenants may have hard slot quotas and weighted shares. ``_pick_next``
+orders the queue by (aged effective priority, weighted tenant load,
+deadline, arrival) — with the defaults (one priority class, unit weights,
+no quotas/deadlines) this reduces exactly to the original fairness rule
+(fewest active slots, oldest-first tie-break). Aging promotes a waiting
+request one bucket per ``aging_s`` seconds, so a low-priority tenant's
+wait behind a flood is bounded by ``priority * aging_s`` plus one
+admission cycle. Backpressure is unchanged (bounded admission FIFO;
+``submit`` raises :class:`AdmissionQueueFull` at capacity and stamps the
+observed queue depth on the request), and both servers free each
+request's prompt buffer once its prefill has retired — a long-running
+server cannot leak one ``req{rid}_prompt`` allocation per request.
+
+:class:`SessionServer` can additionally preempt long decode chains
+cooperatively (``preempt_rounds``): chains are emitted in bounded
+segments, and at each segment boundary — an epoch boundary under the
+device/mesh schedulers — a chain yields its slot to a strictly more
+urgent queued request, parking its opaque ``(cache, token, pos)`` slot
+state and resuming later from exactly where it left off (the stale-slot
+reset machinery makes the handoff safe; no recompute).
 """
 
 from __future__ import annotations
@@ -42,7 +58,7 @@ import collections
 import dataclasses
 import itertools
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,10 +69,17 @@ from ..core.wrapper import AcsKernel
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ArchConfig
 
-__all__ = ["Request", "AdmissionQueueFull", "ContinuousBatchingServer",
-           "SessionServer"]
+__all__ = ["Request", "AdmissionQueueFull", "DrainTimeout",
+           "ContinuousBatchingServer", "SessionServer",
+           "PRIORITY_HIGH", "PRIORITY_NORMAL", "PRIORITY_LOW"]
 
 _rid = itertools.count()
+
+# QoS priority classes (lower = more urgent). Any non-negative int is a
+# valid class; these three are the conventional named tiers.
+PRIORITY_HIGH = 0
+PRIORITY_NORMAL = 1
+PRIORITY_LOW = 2
 
 
 class AdmissionQueueFull(RuntimeError):
@@ -64,11 +87,27 @@ class AdmissionQueueFull(RuntimeError):
     server's backpressure signal to producers."""
 
 
+class DrainTimeout(RuntimeError):
+    """``run_until_drained`` exhausted ``max_iters`` with work still
+    queued or active. Carries the stuck state so operators see *what*
+    stalled instead of a silently truncated result list."""
+
+    def __init__(self, message: str, *, queue_depth: int, active_slots: int,
+                 finished: Optional[List["Request"]] = None):
+        super().__init__(message)
+        self.queue_depth = queue_depth
+        self.active_slots = active_slots
+        # requests that DID finish before the stall — not lost with the raise
+        self.finished = finished or []
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray                  # [S] int32
     max_new: int = 8
     tenant: str = "default"
+    priority: int = PRIORITY_NORMAL     # QoS class, lower = more urgent
+    deadline: Optional[float] = None    # SLO: seconds after arrival, or None
     rid: int = dataclasses.field(default_factory=lambda: next(_rid))
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
@@ -76,32 +115,76 @@ class Request:
     t_admit: float = 0.0                # perf_counter when a slot was granted
     t_finish: float = 0.0               # perf_counter when the last token retired
     queue_depth: int = 0                # admission FIFO depth observed at submit
+    preemptions: int = 0                # times this request's chain was parked
+    rounds_left: int = 0                # decode rounds not yet emitted/retired
+    parked_state: Optional[tuple] = None  # opaque (cache, tok, pos) while parked
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new
 
     @property
-    def latency(self) -> float:
-        """End-to-end request latency (valid once finished)."""
+    def finished(self) -> bool:
+        """True once the request's last token has retired (``t_finish``
+        is stamped exactly once, at finish)."""
+        return self.t_finish > 0.0
+
+    @property
+    def latency(self) -> Optional[float]:
+        """End-to-end request latency, or None until finished. (It used
+        to return ``-t_arrival`` — a large negative number — when read
+        before finish, silently poisoning percentile aggregations.)"""
+        if not self.finished:
+            return None
         return self.t_finish - self.t_arrival
 
 
 class _ServingCore:
-    """Slots, kernels, and fair bounded admission — shared by both servers."""
+    """Slots, kernels, and QoS bounded admission — shared by both servers.
+
+    QoS knobs (all default to the pre-QoS behavior):
+
+    * ``tenant_weights`` — weighted shares: a tenant's load for admission
+      purposes is ``active_slots / weight``, so weight 2.0 holds twice
+      the slots of weight 1.0 at equal queue pressure.
+    * ``tenant_quota`` — hard cap on a tenant's concurrently active
+      slots; an int applies to every tenant, a dict caps only the listed
+      tenants. Quota'd-out requests stay queued (never dropped).
+    * ``aging_s`` — starvation bound: a queued request's *effective*
+      priority improves one bucket per ``aging_s`` seconds waited
+      (clamped at ``PRIORITY_HIGH``), so any request reaches the top
+      bucket within ``priority * aging_s`` seconds. ``None`` disables.
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
                  max_len: int = 64, max_queue: int = 256,
-                 history_limit: Optional[int] = 1024):
+                 history_limit: Optional[int] = 1024,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 tenant_quota: Optional[Union[int, Dict[str, int]]] = None,
+                 aging_s: Optional[float] = 5.0):
         assert cfg.frontend is None, "serving driver uses token models"
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.max_queue = max_queue
         self.history_limit = history_limit
+        self.tenant_weights = dict(tenant_weights or {})
+        for t, w in self.tenant_weights.items():
+            if not w > 0:
+                raise ValueError(f"tenant weight must be > 0: {t!r} -> {w}")
+        self.tenant_quota = tenant_quota
+        if aging_s is not None and not aging_s > 0:
+            raise ValueError(f"aging_s must be > 0 or None, got {aging_s}")
+        self.aging_s = aging_s
+        self.preemptions = 0  # chains parked at a segment boundary (server-wide)
         self.pool = BufferPool()
         self.queue: Deque[Request] = collections.deque()
         self.active: Dict[int, Request] = {}
+        # Incremental per-tenant active-slot counts, maintained at
+        # _grant_slot / _release_slot — _pick_next used to rebuild this
+        # dict from self.active on EVERY admission (O(active x queue)
+        # per grant).
+        self._tenant_active: Dict[str, int] = {}
         # Rolling report trace: a long-lived server's host memory must be
         # flat, so monitoring state rotates instead of accumulating
         # (asserted by benchmarks/bench_soak.py).
@@ -141,14 +224,19 @@ class _ServingCore:
 
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 8,
-               tenant: str = "default") -> Request:
+               tenant: str = "default", priority: int = PRIORITY_NORMAL,
+               deadline: Optional[float] = None) -> Request:
         """Enqueue a request. Raises :class:`AdmissionQueueFull` when the
         bounded FIFO is at capacity and :class:`ValueError` for requests
-        that can never be served (over-long prompt, negative ``max_new``);
-        otherwise stamps the observed queue depth on the request (the
+        that can never be served (over-long prompt, negative ``max_new``,
+        negative ``priority``, non-positive ``deadline``); otherwise
+        stamps the observed queue depth on the request (the
         producer-visible backpressure signal). ``max_new=0`` is valid and
         means zero decode rounds: the request finishes with no generated
-        tokens once its prefill retires."""
+        tokens once its prefill retires. ``priority`` is the QoS class
+        (lower = more urgent, default :data:`PRIORITY_NORMAL`);
+        ``deadline`` is a relative SLO in seconds — once half the budget
+        is gone the request is promoted to the top bucket."""
         if len(self.queue) >= self.max_queue:
             raise AdmissionQueueFull(
                 f"admission queue at capacity ({self.max_queue}); retry later")
@@ -160,7 +248,12 @@ class _ServingCore:
                 "or raise max_len")
         if max_new < 0:
             raise ValueError(f"max_new must be >= 0, got {max_new}")
-        req = Request(prompt=prompt, max_new=max_new, tenant=tenant)
+        if priority < 0:
+            raise ValueError(f"priority must be >= 0, got {priority}")
+        if deadline is not None and not deadline > 0:
+            raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
+        req = Request(prompt=prompt, max_new=max_new, tenant=tenant,
+                      priority=priority, deadline=deadline)
         req.t_arrival = time.perf_counter()
         self.queue.append(req)
         req.queue_depth = len(self.queue)
@@ -170,33 +263,105 @@ class _ServingCore:
         return len(self.queue)
 
     # -- admission ----------------------------------------------------------
-    def _pick_next(self) -> Request:
-        """Multi-tenant fairness: admit for the tenant holding the fewest
-        active slots; oldest-first tie-break (deque order is arrival
-        order, so index order IS age order)."""
-        counts: Dict[str, int] = {}
-        for r in self.active.values():
-            counts[r.tenant] = counts.get(r.tenant, 0) + 1
-        best, best_load = 0, counts.get(self.queue[0].tenant, 0)
-        for i in range(1, len(self.queue)):
-            load = counts.get(self.queue[i].tenant, 0)
-            if load < best_load:
-                best, best_load = i, load
-        if best == 0:
+    def _quota_of(self, tenant: str) -> Optional[int]:
+        if self.tenant_quota is None:
+            return None
+        if isinstance(self.tenant_quota, dict):
+            return self.tenant_quota.get(tenant)
+        return self.tenant_quota
+
+    def _weight_of(self, tenant: str) -> float:
+        return self.tenant_weights.get(tenant, 1.0)
+
+    def effective_priority(self, req: Request,
+                           now: Optional[float] = None) -> int:
+        """The request's priority bucket *as scheduled*: the submitted
+        class, improved one bucket per ``aging_s`` seconds waited
+        (starvation bound), promoted to the top bucket once half its
+        deadline budget is spent, clamped at :data:`PRIORITY_HIGH` —
+        an aged request ties the top class but never outranks it."""
+        if now is None:
+            now = time.perf_counter()
+        bucket = req.priority
+        if self.aging_s is not None:
+            bucket -= int((now - req.t_arrival) / self.aging_s)
+        if req.deadline is not None:
+            slack = (req.t_arrival + req.deadline) - now
+            if slack <= 0.5 * req.deadline:
+                bucket = PRIORITY_HIGH
+        return max(bucket, PRIORITY_HIGH)
+
+    def _admission_key(self, req: Request, now: float):
+        """Total admission order: most urgent effective bucket, then
+        least weighted tenant load, then earliest absolute deadline,
+        then arrival order (rid is monotone in submit order and survives
+        preemption re-queues, so a parked request keeps its age)."""
+        deadline_at = (req.t_arrival + req.deadline
+                       if req.deadline is not None else float("inf"))
+        load = self._tenant_active.get(req.tenant, 0) / self._weight_of(req.tenant)
+        return (self.effective_priority(req, now), load, deadline_at, req.rid)
+
+    def _pick_next(self) -> Optional[Request]:
+        """QoS admission: pop the queued request minimizing
+        :meth:`_admission_key`, skipping tenants at their quota. Returns
+        None when every queued request is quota-blocked (callers stop
+        admitting; the requests stay queued). With the default knobs —
+        one priority class, unit weights, no quotas/deadlines — the key
+        degenerates to (tenant active count, arrival), i.e. exactly the
+        original fewest-active-slots / oldest-first scan, but against
+        incremental counts: O(queue) per grant instead of
+        O(active x queue).
+
+        Under cooperative preemption (``preempt_rounds`` set) admission
+        additionally holds back requests strictly less urgent than the
+        most urgent ACTIVE class: a chain that just yielded at a segment
+        boundary must not be re-admitted into the slot it freed while
+        the urgent work it yielded to is still running (priority
+        isolation — aging re-levels parked chains, so the hold-back is
+        starvation-bounded like every other ordering here)."""
+        now = time.perf_counter()
+        floor = None
+        if getattr(self, "preempt_rounds", None) is not None and self.active:
+            floor = min(self.effective_priority(r, now)
+                        for r in self.active.values())
+        best_i: Optional[int] = None
+        best_key = None
+        for i, r in enumerate(self.queue):
+            quota = self._quota_of(r.tenant)
+            if quota is not None and self._tenant_active.get(r.tenant, 0) >= quota:
+                continue
+            if floor is not None and self.effective_priority(r, now) > floor:
+                continue
+            key = self._admission_key(r, now)
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        if best_i is None:
+            return None
+        if best_i == 0:
             return self.queue.popleft()
-        req = self.queue[best]
-        del self.queue[best]
+        req = self.queue[best_i]
+        del self.queue[best_i]
         return req
 
     def _grant_slot(self, req: Request):
-        """Bind the request to a free slot and allocate its prompt buffer
-        (freed again when the prefill retires). The slot value resets to
-        ``(cache, None, 0)`` so the previous occupant's leftover token/pos
-        can never be mistaken for this request's state (a stale token made
-        the batch server schedule a decode before the new prefill retired)."""
+        """Bind the request to a free slot; returns its prompt buffer
+        (freed again when the prefill retires), or None when resuming a
+        preempted chain — the parked ``(cache, tok, pos)`` is restored
+        verbatim and no prefill is needed. For fresh admissions the slot
+        value resets to ``(cache, None, 0)`` so the previous occupant's
+        leftover token/pos can never be mistaken for this request's state
+        (a stale token made the batch server schedule a decode before the
+        new prefill retired)."""
         req.slot = self.free.pop(0)
-        req.t_admit = time.perf_counter()
+        if req.t_admit == 0.0:  # first grant only: resume keeps the original
+            req.t_admit = time.perf_counter()
         self.active[req.slot] = req
+        self._tenant_active[req.tenant] = \
+            self._tenant_active.get(req.tenant, 0) + 1
+        if req.parked_state is not None:
+            self.slots[req.slot].value = req.parked_state
+            req.parked_state = None
+            return None
         cache = self.slots[req.slot].value[0]
         self.slots[req.slot].value = (cache, None, 0)
         tok_buf = self.pool.alloc(
@@ -204,6 +369,21 @@ class _ServingCore:
             value=jnp.asarray(req.prompt[None]),
         )
         return tok_buf
+
+    def _release_slot(self, s: int) -> Request:
+        """Unbind slot ``s``: drop it from the active set, decrement the
+        tenant's incremental count, return the slot to the free list.
+        Every slot-freeing path (finish, harvest, zero-round finish,
+        preemption park) funnels through here so the counts _pick_next
+        reads can never drift from ``self.active``."""
+        req = self.active.pop(s)
+        n = self._tenant_active.get(req.tenant, 0) - 1
+        if n > 0:
+            self._tenant_active[req.tenant] = n
+        else:
+            self._tenant_active.pop(req.tenant, None)
+        self.free.append(s)
+        return req
 
     def _harvest_slot(self, s: int) -> Optional[Request]:
         """Read the slot's freshly decoded token; return the request if it
@@ -213,8 +393,7 @@ class _ServingCore:
         req.generated.append(int(np.asarray(tok)[0]))
         if req.done or int(pos) >= self.max_len - 1:
             req.t_finish = time.perf_counter()
-            del self.active[s]
-            self.free.append(s)
+            self._release_slot(s)
             return req
         return None
 
@@ -227,9 +406,13 @@ class ContinuousBatchingServer(_ServingCore):
     *i+1*'s prefill."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 4,
-                 max_len: int = 64, window: int = 32, max_queue: int = 256):
+                 max_len: int = 64, window: int = 32, max_queue: int = 256,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 tenant_quota: Optional[Union[int, Dict[str, int]]] = None,
+                 aging_s: Optional[float] = 5.0):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
-                         max_queue=max_queue)
+                         max_queue=max_queue, tenant_weights=tenant_weights,
+                         tenant_quota=tenant_quota, aging_s=aging_s)
         # slot values are opaque pytrees (cache trees): the fused vmap
         # batcher needs array operands, so waves execute via the serial
         # executor — the window still builds multi-task waves, which is
@@ -242,10 +425,13 @@ class ContinuousBatchingServer(_ServingCore):
         active set — all through the ACS window. Returns finished requests."""
         stream = TaskStream()
 
-        # admit as many queued requests as there are free slots
+        # admit as many queued requests as there are free slots (stop
+        # early if everything still queued is quota-blocked)
         prompt_bufs: List[str] = []
         while self.queue and self.free:
             req = self._pick_next()
+            if req is None:
+                break
             tok_buf = self._grant_slot(req)
             prompt_bufs.append(tok_buf.name)
             self._prefill_kernel.launch(
@@ -290,18 +476,25 @@ class ContinuousBatchingServer(_ServingCore):
             if tok is not None and (
                     req.done or int(pos) >= self.max_len - 1):
                 req.t_finish = time.perf_counter()
-                del self.active[s]
-                self.free.append(s)
+                self._release_slot(s)
                 finished.append(req)
         return finished
 
     def run_until_drained(self, max_iters: int = 200) -> List[Request]:
-        out = []
+        """Step until queue and slots are empty. Raises
+        :class:`DrainTimeout` (carrying the stuck queue/active counts and
+        the requests that DID finish) if ``max_iters`` steps don't drain
+        the server — it used to return the partial list silently."""
+        out: List[Request] = []
         for _ in range(max_iters):
             out.extend(self.step())
             if not self.queue and not self.active:
-                break
-        return out
+                return out
+        raise DrainTimeout(
+            f"run_until_drained: {max_iters} steps left "
+            f"{len(self.queue)} queued / {len(self.active)} active requests",
+            queue_depth=len(self.queue), active_slots=len(self.active),
+            finished=out)
 
 
 class SessionServer(_ServingCore):
@@ -346,6 +539,22 @@ class SessionServer(_ServingCore):
     samples which shard owns each active slot (``shard_occupancy``), and
     the rolling ``shard_slot_samples`` trace plus the session's
     cross-shard/transfer counters land in the close report.
+
+    **Cooperative preemption** (``preempt_rounds``, DESIGN §13): with
+    the default ``None``, a request's whole decode chain is emitted at
+    admission (the pre-QoS behavior). With ``preempt_rounds=k``, chains
+    are emitted in segments of at most ``k`` decode rounds; at each
+    segment boundary — an epoch boundary under the device/mesh
+    schedulers, since a segment's tasks drain within one epoch — the
+    chain either continues (next segment emitted from the retirement
+    callback), finishes, or *yields its slot*: if a strictly more
+    urgent admissible request is queued and no slot is free, the
+    chain's opaque ``(cache, token, pos)`` state is parked on the
+    Request, the slot is freed (stale-slot reset makes the handoff
+    safe), and the request re-queues at its original age. Resume
+    restores the parked state verbatim — no recompute, and the token
+    stream is bit-identical to an unpreempted run. Each park increments
+    ``Request.preemptions`` and the server-wide ``preemptions`` counter.
     """
 
     SCHEDULERS = ("frontier", "wave", "device", "mesh")
@@ -354,9 +563,19 @@ class SessionServer(_ServingCore):
                  max_len: int = 64, window: int = 32, max_queue: int = 256,
                  scheduler: str = "frontier", max_inflight: int = 8,
                  history_limit: Optional[int] = 1024,
-                 plan_mode: str = "loop", n_shards: Optional[int] = None):
+                 plan_mode: str = "loop", n_shards: Optional[int] = None,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 tenant_quota: Optional[Union[int, Dict[str, int]]] = None,
+                 aging_s: Optional[float] = 5.0,
+                 preempt_rounds: Optional[int] = None):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
-                         max_queue=max_queue, history_limit=history_limit)
+                         max_queue=max_queue, history_limit=history_limit,
+                         tenant_weights=tenant_weights,
+                         tenant_quota=tenant_quota, aging_s=aging_s)
+        if preempt_rounds is not None and preempt_rounds < 1:
+            raise ValueError(
+                f"preempt_rounds must be >= 1 or None, got {preempt_rounds}")
+        self.preempt_rounds = preempt_rounds
         if scheduler == "frontier":
             from ..core.frontier import FrontierSession
 
@@ -396,6 +615,9 @@ class SessionServer(_ServingCore):
                 f"got {scheduler!r}")
         self.scheduler_name = scheduler
         self._finished: List[Request] = []
+        # set during close(): the flush retires chains (firing _finish_slot),
+        # but a closing window must not receive fresh admissions
+        self._closing = False
         # tid -> prefill | decode for tasks currently IN FLIGHT; entries
         # drop at retirement, so a long-lived server holds at most one
         # window's worth (schedule-kind traces for finished work live in
@@ -403,18 +625,25 @@ class SessionServer(_ServingCore):
         self.task_kinds: Dict[int, str] = {}
         self.occupancy_samples: Deque[int] = collections.deque(
             maxlen=history_limit)
-        # mesh only: rolling per-device slot-occupancy trace, one
-        # {shard: active slot count} sample per pump (bounded like every
-        # other monitoring surface — soak-safe).
+        # mesh only: rolling per-device slot-occupancy trace — one
+        # {shard: active slot count} sample per pump plus one per request
+        # retirement (bounded like every other monitoring surface —
+        # soak-safe).
         self.shard_slot_samples: Deque[Dict[int, int]] = collections.deque(
             maxlen=history_limit)
 
     # -- retirement callbacks (fire inside session.poll/drive) --------------
     def _finish_slot(self, slot: int) -> None:
-        req = self.active.pop(slot)
+        if self.scheduler_name == "mesh":
+            # sample while the finishing slot is still active: its chain
+            # just executed, so shard attribution is known — the per-pump
+            # sample can land when callback-admitted successors haven't
+            # run yet (unattributed) or everything already drained
+            self.shard_slot_samples.append(self.shard_occupancy())
+        req = self._release_slot(slot)
         req.t_finish = time.perf_counter()
-        self.free.append(slot)
         self._finished.append(req)
+        self._admit_ready()
 
     def _on_prefill_retired(self, task, buf_name: str, slot: int,
                             finish: bool) -> None:
@@ -423,47 +652,147 @@ class SessionServer(_ServingCore):
         if finish:  # zero decode rounds: the prefill IS the whole program
             self._finish_slot(slot)
 
-    def _on_decode_retired(self, task, slot: int, last: bool) -> None:
+    def _on_decode_retired(self, task, slot: int, boundary: bool) -> None:
         self.task_kinds.pop(task.tid, None)
         req = self.active[slot]
         _, tok, _ = self.slots[slot].value
         req.generated.append(int(np.asarray(tok)[0]))
-        if last:
+        req.rounds_left -= 1
+        if not boundary:
+            return
+        # Segment boundary: finish, yield the slot, or emit the next
+        # segment (the continuation submits from inside the retirement
+        # callback — the session RLock permits it, and the tasks land in
+        # the window for the next epoch/group).
+        if req.rounds_left <= 0:
             self._finish_slot(slot)
+        elif self._should_yield(req):
+            self._park(slot)
+        else:
+            self._emit_decode_segment(req)
+
+    def _should_yield(self, req: Request) -> bool:
+        """Cooperative-preemption test at a segment boundary: yield iff
+        strictly more urgent work exists — RUNNING in another slot (the
+        urgent class takes every host round-trip until it drains:
+        priority isolation, not just a slot), or admissible in the queue
+        with no free slot to serve it. Equal urgency never preempts (no
+        thrash between peers, and aging re-levels a parked chain so
+        isolation is starvation-bounded), and quota-blocked waiters don't
+        trigger a park they couldn't use."""
+        if self.preempt_rounds is None:
+            return False
+        now = time.perf_counter()
+        mine = self.effective_priority(req, now)
+        for r in self.active.values():
+            if r is not req and self.effective_priority(r, now) < mine:
+                return True
+        if self.free or not self.queue:
+            return False
+        for r in self.queue:
+            quota = self._quota_of(r.tenant)
+            if quota is not None and self._tenant_active.get(r.tenant, 0) >= quota:
+                continue
+            if self.effective_priority(r, now) < mine:
+                return True
+        return False
+
+    def _park(self, slot: int) -> None:
+        """Preempt: capture the chain's opaque slot state (fresh — its
+        segment's last decode just retired), free the slot, and re-queue
+        the request at its original age (rid order; the internal
+        re-queue is exempt from the admission bound — the request was
+        already admitted once). Resume happens through the normal
+        admission path via ``parked_state``."""
+        req = self._release_slot(slot)
+        req.parked_state = self.slots[slot].value
+        req.slot = None
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.append(req)
+        self._admit_ready()
 
     # -- service loop --------------------------------------------------------
+    def _admit_ready(self) -> None:
+        """Admission sweep: grant free slots to queued requests in QoS
+        order. Runs between pumps AND from the slot-freeing retirement
+        callbacks (finish, park). The callback path matters: the
+        session's poll/drive pumps staged work to quiescence, and under
+        lazy segment emission a long chain's rounds cascade entirely
+        inside one drive — a slot freed mid-cascade would sit idle until
+        the cascade drains, so an urgent arrival that parked a flood
+        chain would still wait behind the rest of the epoch. Admitting
+        from inside the callback lets the successor's program join the
+        same cascade (submission from retirement callbacks is the same
+        contract the decode continuations rely on)."""
+        if self._closing or self.session.closed:
+            return
+        while self.queue and self.free:
+            req = self._pick_next()
+            if req is None:  # everything queued is quota-blocked/held back
+                break
+            self._admit(req)
+
     def _admit(self, req: Request) -> None:
-        """Emit the request's ENTIRE kernel program — prefill plus every
-        decode round — into the live window at admission. Termination is
-        count-based (``max_new`` bounded by ``max_len``), so the full
-        chain is known up front: the window serializes it via the slot
-        buffer's RAW hazards, co-schedules it against other slots' chains
-        (disjoint buffers), and the host only trails behind retirements
-        harvesting tokens — no mid-request host round-trip ever gates the
-        decode chain (§III-D)."""
+        """Emit the request's kernel program into the live window at
+        admission: the prefill plus its decode chain — whole
+        (``preempt_rounds=None``: termination is count-based, so the full
+        chain is known up front and no mid-request host round-trip ever
+        gates it, §III-D) or in preemptible segments. The window
+        serializes the chain via the slot buffer's RAW hazards and
+        co-schedules it against other slots' chains (disjoint buffers);
+        the per-request stream stamps each task with the request's
+        effective priority bucket so urgent chains launch first among
+        independent READY kernels. A resumed request (parked state
+        restored by ``_grant_slot``) skips the prefill and emits only its
+        remaining rounds."""
         tok_buf = self._grant_slot(req)
         s = req.slot
-        # live per-request stream: AcsKernel.launch feeds the session's
-        # window directly, tagged for per-request accounting
-        stream = TaskStream(sink=self.session, tag=f"req{req.rid}", record=False)
+        if tok_buf is None:  # resuming a preempted chain
+            self._emit_decode_segment(req)
+            return
+        stream = self._stream_for(req)
         task = self._prefill_kernel.launch(
             stream, inputs=(self.slots[s], tok_buf), outputs=(self.slots[s],))
         self.task_kinds[task.tid] = "prefill"
         # Decode rounds the cache can actually hold: zero when max_new=0 or
         # the prompt already fills it — never force a phantom round that
         # would advance pos past max_len (the old max(1, ...) clamp).
-        rounds = min(req.max_new, self.max_len - 1 - len(req.prompt))
+        req.rounds_left = min(req.max_new, self.max_len - 1 - len(req.prompt))
         self.session.on_task_retired(
-            task, lambda t, n=tok_buf.name, s=s, fin=(rounds == 0):
+            task, lambda t, n=tok_buf.name, s=s, fin=(req.rounds_left == 0):
             self._on_prefill_retired(t, n, s, fin))
+        self._emit_decode_segment(req, stream)
+
+    def _stream_for(self, req: Request) -> TaskStream:
+        """Live per-request stream: AcsKernel.launch feeds the session's
+        window directly, tagged for per-request accounting and stamped
+        with the request's current effective priority bucket."""
+        return TaskStream(sink=self.session, tag=f"req{req.rid}",
+                          record=False,
+                          priority=self.effective_priority(req))
+
+    def _emit_decode_segment(self, req: Request,
+                             stream: Optional[TaskStream] = None) -> None:
+        """Emit the next run of decode rounds for the request's chain:
+        everything left when ``preempt_rounds`` is None, else at most
+        ``preempt_rounds`` rounds — the boundary round's retirement
+        callback then decides finish / yield / continue."""
+        if req.rounds_left <= 0:
+            return
+        s = req.slot
+        if stream is None:
+            stream = self._stream_for(req)
+        seg = (req.rounds_left if self.preempt_rounds is None
+               else min(req.rounds_left, self.preempt_rounds))
         bufs = (self.slots[s],)
-        for k in range(rounds):
+        for k in range(seg):
             dtask = self._decode_kernel.launch(stream, inputs=bufs, outputs=bufs)
             self.task_kinds[dtask.tid] = "decode"
             self.session.on_task_retired(
                 dtask,
-                lambda t, s=s, last=(k == rounds - 1):
-                self._on_decode_retired(t, s, last))
+                lambda t, s=s, boundary=(k == seg - 1):
+                self._on_decode_retired(t, s, boundary))
 
     def pump(self) -> List[Request]:
         """One non-blocking service iteration; returns newly finished
@@ -473,8 +802,7 @@ class SessionServer(_ServingCore):
         closing flush."""
         if not self.session.closed:
             self.session.poll()
-            while self.queue and self.free:
-                self._admit(self._pick_next())
+            self._admit_ready()
             self.occupancy_samples.append(self.session.window.resident())
             if self.scheduler_name == "mesh":
                 self.shard_slot_samples.append(self.shard_occupancy())
@@ -498,23 +826,41 @@ class SessionServer(_ServingCore):
 
     def run_until_drained(self, max_iters: int = 10_000) -> List[Request]:
         """Serve until queue and slots empty (blocking between pumps only
-        when nothing retired — the session's oldest-group sync)."""
+        when nothing retired — the session's oldest-group sync). Raises
+        :class:`DrainTimeout` (with the stuck queue/active counts and the
+        requests that DID finish) when ``max_iters`` pumps don't drain
+        the server — it used to return the partial list silently."""
         out: List[Request] = []
         for _ in range(max_iters):
             done = self.pump()
             out.extend(done)
             if not self.queue and not self.active:
-                break
+                return out
             if not done:
                 self.session.drive()
-        return out
+        raise DrainTimeout(
+            f"run_until_drained: {max_iters} pumps left "
+            f"{len(self.queue)} queued / {len(self.active)} active requests",
+            queue_depth=len(self.queue), active_slots=len(self.active),
+            finished=out)
 
     def close(self):
         """Close the underlying session and log its final report. Chains
         still in flight retire during the closing flush — collect those
-        requests with one more ``pump()`` after close."""
+        requests with one more ``pump()`` after close. Under
+        ``preempt_rounds`` the continuation segments of in-flight chains
+        are emitted lazily from retirement callbacks, which cannot feed a
+        closing window — so drain first (finished requests stay
+        collectable via ``pump()``)."""
+        if self.preempt_rounds is not None and (self.queue or self.active):
+            # two statements on purpose: pump() REBINDS self._finished, so
+            # the attribute must be read after run_until_drained returns
+            drained = self.run_until_drained()
+            self._finished.extend(drained)
+        self._closing = True
         report = self.session.close()
         entry = report.as_dict()
+        entry["preemptions"] = self.preemptions
         entry["occupancy_mean"] = (
             float(np.mean(self.occupancy_samples)) if self.occupancy_samples else 0.0)
         if hasattr(report, "session_stats"):  # device session epoch counters

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from _prophelper import given, settings, st
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import (
@@ -501,3 +502,54 @@ class TestRowLifecycle:
         for b in live:
             np.testing.assert_array_equal(
                 np.asarray(b.value), np.full(5, expected[id(b)], np.float32))
+
+
+class TestCrossDevicePinnedSlabs:
+    """A mesh shard pins its session's slabs to its own device, but the
+    buffers fed to it may hold arrays committed to ANOTHER device — a
+    shared buffer last written by a different shard's dispatch. Every
+    in-place slab update must re-commit the incoming rows to the slab's
+    device first, or jax raises its incompatible-devices error (this
+    crashed mesh serving of mixed-priority hazard streams under
+    ``--xla_force_host_platform_device_count=8``)."""
+
+    pytestmark = pytest.mark.skipif(
+        jax.device_count() < 2, reason="needs >= 2 devices")
+
+    def _pinned(self, pool, arena):
+        a = pool.alloc((6,), np.float32, value=jnp.zeros(6))
+        arena.add(a)
+        return a, [jax.device_put(s, jax.devices()[1]) for s in arena.pack()]
+
+    def _committed(self, fill):
+        return jax.device_put(jnp.full(6, fill, jnp.float32),
+                              jax.devices()[0])
+
+    def test_pack_incremental_appends_foreign_rows(self):
+        pool, arena = BufferPool(), SlabArena(pad_multiple=8)
+        _, slabs = self._pinned(pool, arena)
+        b = pool.alloc((6,), np.float32, value=self._committed(7.0))
+        cid, row = arena.add(b)
+        slabs = arena.pack_incremental(slabs)
+        np.testing.assert_array_equal(np.asarray(slabs[cid][row][:6]),
+                                      np.full(6, 7.0, np.float32))
+
+    def test_pack_incremental_refreshes_recycled_foreign_row(self):
+        pool, arena = BufferPool(), SlabArena(pad_multiple=8)
+        a, slabs = self._pinned(pool, arena)
+        arena.free(a)
+        c = pool.alloc((6,), np.float32, value=self._committed(9.0))
+        cid, row = arena.add(c)  # recycled below the watermark
+        slabs = arena.pack_incremental(slabs)
+        np.testing.assert_array_equal(np.asarray(slabs[cid][row][:6]),
+                                      np.full(6, 9.0, np.float32))
+
+    def test_update_rows_with_foreign_value(self):
+        pool, arena = BufferPool(), SlabArena(pad_multiple=8)
+        a, slabs = self._pinned(pool, arena)
+        a.value = self._committed(3.0)
+        addr = arena.address(a)
+        slabs = arena.update_rows(slabs, [a])
+        np.testing.assert_array_equal(
+            np.asarray(slabs[addr.class_id][addr.row][:6]),
+            np.full(6, 3.0, np.float32))

@@ -326,6 +326,52 @@ def test_committed_bench_window_size_json():
     _assert_window_size_metrics(payload)
 
 
+# Structural gates the committed QoS artifact must hold (DESIGN §13): the
+# preempting plane keeps the interactive-class tail within 2x the unloaded
+# floor at no aggregate-throughput cost, preemption never changes a token,
+# aging un-starves a flooded-out low-priority tenant, priority buckets
+# reorder the window's READY head, and the mixed-priority hazard stream
+# stays bit-identical through the loop lowering and the mesh session.
+QOS_GATES = ("qos_high_p99_within_2x_unloaded",
+             "qos_throughput_within_fairness",
+             "qos_tokens_matches_fairness",
+             "qos_aging_beats_flood_drain",
+             "qos_priority_beats_fifo",
+             "qos_loop_matches_serial",
+             "qos_mesh_matches_serial")
+
+
+def _assert_qos_gates(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    for gate in QOS_GATES:
+        assert metrics.get(("qos", gate)) == 1, (
+            f"qos gate {gate!r} failed: "
+            f"{ {m: v for (s, m), v in metrics.items() if s == 'qos'} }")
+    # the evidence behind the verdicts: pooled per-class tails, the paired
+    # median ratios the timing gates judge, and a real preemption count
+    for col in ("unloaded_high_p99_ms", "fairness_high_p99_ms",
+                "fairness_high_p99_9_ms", "qos_high_p99_ms",
+                "qos_high_p99_9_ms", "qos_high_p99_vs_unloaded_median_ratio",
+                "qos_vs_fairness_tokens_median_ratio"):
+        assert ("qos", col) in metrics, f"missing qos,{col}"
+    assert metrics[("qos", "qos_preemptions")] >= 1
+    assert metrics[("qos", "n_devices")] >= 1
+
+
+def test_committed_bench_qos_json():
+    """The repo-root BENCH_qos.json (regenerated by the CI multi-device
+    lane under forced host devices) must stay schema-valid with every
+    QoS-plane gate green."""
+    path = os.path.join(REPO_ROOT, "BENCH_qos.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=["qos"])
+    assert payload["sections"] == ["qos"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_qos_gates(payload)
+
+
 # -- benchmarks/compare.py: the committed-vs-fresh trajectory driver -------
 
 def _payload(rows):

@@ -248,6 +248,62 @@ class TestLoopModeMatrix:
 
 
 # ---------------------------------------------------------------------------
+# QoS bit-identity (DESIGN §13): priority stamping buckets the window's
+# READY index, so it may only reorder provably independent work — every
+# session kind and batch policy must reproduce the serial snapshot of the
+# SAME stream exactly when one tenant is stamped urgent and the other
+# background. The serial reference is the unstamped mixed_tag ref: if
+# priorities changed any value anywhere, these legs would diverge.
+# ---------------------------------------------------------------------------
+
+class TestQosMatrix:
+    @staticmethod
+    def _build_qos(seed=0):
+        snap, tasks = _build_mixed_tag(seed)
+        for t in tasks:  # tenantA urgent, tenantB background
+            t.priority = 0 if t.stream_tag == "tenantA" else 2
+        return snap, tasks
+
+    @pytest.mark.parametrize("kind", SESSION_NAMES)
+    def test_priority_stamped_feed_matches_serial(self, kind):
+        ref = _ref("mixed_tag")
+        snap, tasks = self._build_qos()
+        session = make_session(kind, window_size=WINDOW)
+        rng = np.random.RandomState(23)
+        i = 0
+        while i < len(tasks):
+            k = 1 + rng.randint(6)
+            session.submit(tasks[i: i + k])
+            i += k
+            if rng.rand() < 0.6:
+                session.poll()
+        report = session.close()
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.window_stats["retired"] == len(tasks)
+
+    @pytest.mark.parametrize("policy", SCHEDULER_NAMES)
+    def test_priority_stamped_batch_matches_serial(self, policy):
+        ref = _ref("mixed_tag")
+        snap, tasks = self._build_qos()
+        run = make_scheduler(policy, window_size=WINDOW)
+        report = run(tasks)
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.exec_stats["tasks_run"] == len(tasks)
+
+    def test_priority_stamped_loop_mode_matches_serial(self):
+        """plan_mode="loop" drains epochs in program order regardless of
+        priority (§2-A3 correctness is priority-oblivious by design)."""
+        ref = _ref("mixed_tag")
+        snap, tasks = self._build_qos()
+        session = make_session("device", window_size=WINDOW,
+                               plan_mode="loop")
+        session.submit(tasks)
+        report = session.close()
+        np.testing.assert_array_equal(snap(), ref)
+        assert report.window_stats["retired"] == len(tasks)
+
+
+# ---------------------------------------------------------------------------
 # Factory validation: unknown names / plan modes fail loudly, naming the
 # valid choices (both registries).
 # ---------------------------------------------------------------------------

@@ -1,0 +1,431 @@
+"""Multi-tenant QoS serving plane (DESIGN §13) + the serving bug sweep.
+
+Covers the three named regressions (``Request.latency`` pre-finish,
+silent ``run_until_drained`` exhaustion, ``_pick_next`` rescan cost /
+equivalence) and the QoS behaviors: priority-first admission, weighted
+shares, hard quotas, deadline promotion, the aging starvation bound
+under a one-tenant flood (across the device and mesh schedulers), and
+cooperative preemption of long decode chains at segment/epoch
+boundaries — with bit-identical tokens to an unpreempted run."""
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.runtime import (
+    PRIORITY_HIGH,
+    PRIORITY_LOW,
+    PRIORITY_NORMAL,
+    ContinuousBatchingServer,
+    DrainTimeout,
+    Request,
+    SessionServer,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    cfg = ARCHS["h2o-danube-3-4b"].reduced()
+    return dataclasses.replace(cfg, n_layers=1, d_model=32, d_ff=64, vocab=64,
+                               n_heads=2, n_kv_heads=1, head_dim=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    return init_params(tiny_cfg, jax.random.PRNGKey(0), tp_size=1)
+
+
+def _prompts(tiny_cfg, n, seed=0, length=5):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, tiny_cfg.vocab, length) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Bug 1: Request.latency before finish
+# ---------------------------------------------------------------------------
+
+class TestLatencyPreFinish:
+    def test_latency_is_none_until_finished(self):
+        req = Request(prompt=np.array([1, 2, 3], np.int32))
+        req.t_arrival = time.perf_counter()
+        assert not req.finished
+        # the old property returned t_finish - t_arrival == -t_arrival: a
+        # large negative number silently poisoning percentile math
+        assert req.latency is None
+        req.t_finish = req.t_arrival + 0.25
+        assert req.finished
+        assert req.latency == pytest.approx(0.25)
+
+    def test_queued_and_active_requests_report_none(self, tiny_cfg,
+                                                    tiny_params):
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=1,
+                               max_len=16)
+        reqs = [server.submit(p, max_new=2)
+                for p in _prompts(tiny_cfg, 3, seed=4)]
+        server.pump()  # one admitted (active), two queued
+        assert all(r.latency is None for r in reqs)
+        done = server.run_until_drained()
+        server.close()
+        assert len(done) == 3
+        for r in done:
+            assert r.latency is not None and r.latency > 0
+        # percentile aggregation over finished requests stays well-formed
+        assert float(np.percentile([r.latency for r in done], 99)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Bug 2: silent run_until_drained exhaustion
+# ---------------------------------------------------------------------------
+
+class TestDrainTimeout:
+    def test_session_server_raises_on_stalled_session(self, tiny_cfg,
+                                                      tiny_params):
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=1,
+                               max_len=16)
+        server.submit(_prompts(tiny_cfg, 1)[0], max_new=2)
+        server.submit(_prompts(tiny_cfg, 2)[1], max_new=2)
+        # stall stub: the session never retires anything
+        server.session.poll = lambda: []
+        server.session.drive = lambda: []
+        with pytest.raises(DrainTimeout) as ei:
+            server.run_until_drained(max_iters=5)
+        assert ei.value.active_slots == 1  # one admitted into the only slot
+        assert ei.value.queue_depth == 1   # one stuck behind it
+        assert ei.value.finished == []
+        assert "5" in str(ei.value)
+
+    def test_batch_server_raises_when_steps_exhaust(self, tiny_cfg,
+                                                    tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=1, max_len=16)
+        server.submit(_prompts(tiny_cfg, 1)[0], max_new=2)
+        server.step = lambda: []  # stall stub: no progress per step
+        with pytest.raises(DrainTimeout) as ei:
+            server.run_until_drained(max_iters=3)
+        assert ei.value.queue_depth == 1
+        assert ei.value.active_slots == 0
+
+    def test_healthy_drain_does_not_raise(self, tiny_cfg, tiny_params):
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=2,
+                               max_len=16)
+        server.submit(_prompts(tiny_cfg, 1)[0], max_new=2)
+        done = server.run_until_drained()
+        server.close()
+        assert len(done) == 1
+
+
+# ---------------------------------------------------------------------------
+# Bug 3: _pick_next — incremental counts must reproduce the old scan
+# ---------------------------------------------------------------------------
+
+def _old_pick_rid(queue, active):
+    """The pre-QoS admission rule, verbatim: rebuild per-tenant active
+    counts, pick the queued request whose tenant holds the fewest active
+    slots, oldest-first tie-break (deque order)."""
+    counts = {}
+    for r in active.values():
+        counts[r.tenant] = counts.get(r.tenant, 0) + 1
+    best, best_load = 0, counts.get(queue[0].tenant, 0)
+    for i in range(1, len(queue)):
+        load = counts.get(queue[i].tenant, 0)
+        if load < best_load:
+            best, best_load = i, load
+    return queue[best].rid
+
+
+class TestPickNextEquivalence:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_property_choice_unchanged_vs_old_scan(self, seed, tiny_cfg,
+                                                   tiny_params):
+        """Property: under the default knobs (one priority class, unit
+        weights, no quotas/deadlines), the incremental-count _pick_next
+        chooses EXACTLY the request the old O(active x queue) scan would
+        have, across randomized submit / grant / release traces."""
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=4, max_len=16,
+                                          max_queue=64)
+        rng = np.random.RandomState(seed)
+        tenants = ["alpha", "beta", "gamma"]
+        prompt = _prompts(tiny_cfg, 1, seed=seed)[0]
+        checked = 0
+        for _ in range(120):
+            r = rng.rand()
+            if r < 0.45 and len(server.queue) < server.max_queue:
+                server.submit(prompt, max_new=1,
+                              tenant=tenants[rng.randint(len(tenants))])
+            elif r < 0.8 and server.queue and server.free:
+                want = _old_pick_rid(server.queue, server.active)
+                req = server._pick_next()
+                assert req is not None and req.rid == want
+                server._grant_slot(req)
+                server.pool.free(f"req{req.rid}_prompt")
+                checked += 1
+            elif server.active:
+                s = list(server.active)[rng.randint(len(server.active))]
+                server._release_slot(s)
+        assert checked >= 10, "trace exercised too few admissions"
+
+    def test_incremental_counts_track_active_exactly(self, tiny_cfg,
+                                                     tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=3, max_len=16)
+        prompt = _prompts(tiny_cfg, 1)[0]
+        for t in ("a", "a", "b"):
+            server.submit(prompt, max_new=1, tenant=t)
+        while server.queue and server.free:
+            req = server._pick_next()
+            server._grant_slot(req)
+        assert server._tenant_active == {"a": 2, "b": 1}
+        for s in list(server.active):
+            server._release_slot(s)
+        assert server._tenant_active == {}
+
+
+# ---------------------------------------------------------------------------
+# QoS admission: priorities, weights, quotas, deadlines
+# ---------------------------------------------------------------------------
+
+class TestQosAdmission:
+    def test_priority_class_admitted_first(self, tiny_cfg, tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=1, max_len=16)
+        prompt = _prompts(tiny_cfg, 1)[0]
+        low = server.submit(prompt, max_new=1, priority=PRIORITY_LOW)
+        normal = server.submit(prompt, max_new=1)
+        high = server.submit(prompt, max_new=1, priority=PRIORITY_HIGH)
+        assert server._pick_next() is high
+        assert server._pick_next() is normal
+        assert server._pick_next() is low
+
+    def test_weighted_shares_hold_proportional_slots(self, tiny_cfg,
+                                                     tiny_params):
+        server = ContinuousBatchingServer(
+            tiny_cfg, tiny_params, max_slots=3, max_len=16,
+            tenant_weights={"heavy": 2.0})
+        prompt = _prompts(tiny_cfg, 1)[0]
+        for t in ("heavy", "light", "heavy", "light", "heavy", "light"):
+            server.submit(prompt, max_new=1, tenant=t)
+        while server.queue and server.free:
+            server._grant_slot(server._pick_next())
+        by_tenant = {}
+        for r in server.active.values():
+            by_tenant[r.tenant] = by_tenant.get(r.tenant, 0) + 1
+        assert by_tenant == {"heavy": 2, "light": 1}
+
+    def test_quota_caps_active_slots_and_never_drops(self, tiny_cfg,
+                                                     tiny_params):
+        server = ContinuousBatchingServer(
+            tiny_cfg, tiny_params, max_slots=3, max_len=16,
+            tenant_quota={"flood": 1})
+        prompt = _prompts(tiny_cfg, 1)[0]
+        floods = [server.submit(prompt, max_new=1, tenant="flood")
+                  for _ in range(4)]
+        while server.queue and server.free:
+            req = server._pick_next()
+            if req is None:
+                break
+            server._grant_slot(req)
+        # quota holds: one active, the rest stay QUEUED (not dropped)
+        assert len(server.active) == 1
+        assert len(server.queue) == 3
+        assert server._pick_next() is None
+        # releasing the slot re-opens admission for the next flood request
+        server._release_slot(floods[0].slot)
+        nxt = server._pick_next()
+        assert nxt is floods[1]
+
+    def test_quota_respected_through_full_serve(self, tiny_cfg,
+                                                tiny_params):
+        server = ContinuousBatchingServer(
+            tiny_cfg, tiny_params, max_slots=2, max_len=16,
+            tenant_quota={"flood": 1})
+        for p in _prompts(tiny_cfg, 4, seed=5):
+            server.submit(p, max_new=1, tenant="flood")
+        done = []
+        for _ in range(40):
+            done.extend(server.step())
+            assert sum(1 for r in server.active.values()
+                       if r.tenant == "flood") <= 1
+            if not server.queue and not server.active:
+                break
+        assert len(done) == 4
+
+    def test_deadline_promotion_beats_arrival_order(self, tiny_cfg,
+                                                    tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=1, max_len=16)
+        prompt = _prompts(tiny_cfg, 1)[0]
+        older = server.submit(prompt, max_new=1)
+        urgent = server.submit(prompt, max_new=1, deadline=0.002)
+        time.sleep(0.005)  # more than half the deadline budget is gone
+        assert server.effective_priority(urgent) == PRIORITY_HIGH
+        assert server._pick_next() is urgent
+        assert server._pick_next() is older
+
+    def test_submit_validates_qos_fields(self, tiny_cfg, tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=1, max_len=16)
+        prompt = _prompts(tiny_cfg, 1)[0]
+        with pytest.raises(ValueError, match="priority"):
+            server.submit(prompt, priority=-1)
+        with pytest.raises(ValueError, match="deadline"):
+            server.submit(prompt, deadline=0.0)
+        with pytest.raises(ValueError, match="weight"):
+            ContinuousBatchingServer(tiny_cfg, tiny_params, max_slots=1,
+                                     max_len=16,
+                                     tenant_weights={"x": 0.0})
+        with pytest.raises(ValueError, match="aging_s"):
+            ContinuousBatchingServer(tiny_cfg, tiny_params, max_slots=1,
+                                     max_len=16, aging_s=-1.0)
+        with pytest.raises(ValueError, match="preempt_rounds"):
+            SessionServer(tiny_cfg, tiny_params, max_slots=1, max_len=16,
+                          preempt_rounds=0)
+
+    def test_aged_request_ties_but_never_outranks_fresh_high(
+            self, tiny_cfg, tiny_params):
+        server = ContinuousBatchingServer(tiny_cfg, tiny_params,
+                                          max_slots=1, max_len=16,
+                                          aging_s=0.001)
+        prompt = _prompts(tiny_cfg, 1)[0]
+        aged = server.submit(prompt, max_new=1, priority=PRIORITY_LOW)
+        time.sleep(0.01)  # ages far past bucket 0
+        assert server.effective_priority(aged) == PRIORITY_HIGH
+
+
+# ---------------------------------------------------------------------------
+# Starvation bound under a one-tenant flood — device AND mesh schedulers
+# ---------------------------------------------------------------------------
+
+class TestFloodFairness:
+    @pytest.mark.parametrize("scheduler", ["device", "mesh"])
+    def test_flood_cannot_starve_quiet_tenant_beyond_aging_bound(
+            self, tiny_cfg, tiny_params, scheduler):
+        """Adversarial mix: a flooding tenant submits a backlog of
+        strictly higher-priority requests; a quiet tenant's low-priority
+        request must still be admitted before the flood fully drains —
+        aging promotes it to the top bucket within priority * aging_s,
+        after which its zero tenant load wins the tie."""
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=2,
+                               max_len=16, scheduler=scheduler,
+                               aging_s=0.02)
+        flood = [server.submit(p, max_new=3, tenant="flood",
+                               priority=PRIORITY_HIGH)
+                 for p in _prompts(tiny_cfg, 10, seed=6)]
+        quiet = server.submit(_prompts(tiny_cfg, 1, seed=7)[0], max_new=2,
+                              tenant="quiet", priority=PRIORITY_LOW)
+        done = server.run_until_drained()
+        server.close()
+        assert len(done) == 11
+        assert quiet.t_admit < max(f.t_admit for f in flood), (
+            "quiet tenant was starved until the entire flood drained")
+        assert len(quiet.generated) == 2
+
+    def test_without_aging_strict_priority_starves_until_flood_drains(
+            self, tiny_cfg, tiny_params):
+        """Contrast leg: aging disabled, same mix — the quiet LOW request
+        is admitted only after every HIGH flood request (this is what
+        the aging invariant prevents)."""
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=2,
+                               max_len=16, scheduler="frontier",
+                               aging_s=None)
+        flood = [server.submit(p, max_new=3, tenant="flood",
+                               priority=PRIORITY_HIGH)
+                 for p in _prompts(tiny_cfg, 6, seed=6)]
+        quiet = server.submit(_prompts(tiny_cfg, 1, seed=7)[0], max_new=2,
+                              tenant="quiet", priority=PRIORITY_LOW)
+        server.run_until_drained()
+        server.close()
+        assert quiet.t_admit >= max(f.t_admit for f in flood)
+
+
+# ---------------------------------------------------------------------------
+# Cooperative preemption at segment/epoch boundaries
+# ---------------------------------------------------------------------------
+
+class TestPreemption:
+    @pytest.mark.parametrize("scheduler", ["frontier", "device", "mesh"])
+    def test_flood_chain_yields_slot_to_high_priority(self, tiny_cfg,
+                                                      tiny_params,
+                                                      scheduler):
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=1,
+                               max_len=32, scheduler=scheduler,
+                               preempt_rounds=2)
+        p = _prompts(tiny_cfg, 2, seed=8)
+        flood = server.submit(p[0], max_new=10, priority=PRIORITY_LOW)
+        server.pump()  # flood takes the only slot
+        high = server.submit(p[1], max_new=2, priority=PRIORITY_HIGH)
+        done = server.run_until_drained()
+        server.close()
+        done += server.pump()
+        by = {r.rid: r for r in done}
+        assert by[flood.rid].preemptions >= 1
+        assert server.preemptions >= 1
+        assert by[high.rid].t_finish < by[flood.rid].t_finish, (
+            "preemption must let the high-priority request finish first")
+        # the preempted chain still completes in full
+        assert len(by[flood.rid].generated) == 10
+        assert len(by[high.rid].generated) == 2
+
+    def test_preempted_tokens_bit_identical_to_unpreempted(self, tiny_cfg,
+                                                           tiny_params):
+        """Park/resume restores the opaque (cache, tok, pos) verbatim:
+        the token streams must be bit-identical to a run with preemption
+        disabled (which itself matches run_serial per the serving
+        differential tests)."""
+        p = _prompts(tiny_cfg, 2, seed=9)
+
+        def run(preempt_rounds):
+            server = SessionServer(tiny_cfg, tiny_params, max_slots=1,
+                                   max_len=32, scheduler="frontier",
+                                   preempt_rounds=preempt_rounds)
+            flood = server.submit(p[0], max_new=10, priority=PRIORITY_LOW)
+            server.pump()
+            high = server.submit(p[1], max_new=2, priority=PRIORITY_HIGH)
+            done = server.run_until_drained()
+            server.close()
+            done += server.pump()
+            by = {r.rid: r for r in done}
+            return by[flood.rid], by[high.rid], server
+
+        flood_p, high_p, server_p = run(preempt_rounds=2)
+        flood_n, high_n, _ = run(preempt_rounds=None)
+        assert server_p.preemptions >= 1
+        assert flood_p.preemptions >= 1 and flood_n.preemptions == 0
+        assert flood_p.generated == flood_n.generated
+        assert high_p.generated == high_n.generated
+
+    def test_no_preemption_between_equal_priorities(self, tiny_cfg,
+                                                    tiny_params):
+        """Equal urgency never parks a chain — no thrash between peers."""
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=1,
+                               max_len=16, scheduler="frontier",
+                               preempt_rounds=1)
+        p = _prompts(tiny_cfg, 3, seed=10)
+        reqs = [server.submit(x, max_new=3) for x in p]
+        done = server.run_until_drained()
+        server.close()
+        done += server.pump()
+        assert len(done) == 3
+        assert server.preemptions == 0
+        assert all(r.preemptions == 0 for r in reqs)
+
+    def test_close_drains_segmented_chains(self, tiny_cfg, tiny_params):
+        """close() under preempt_rounds must finish lazily-emitted chain
+        segments (they submit from retirement callbacks, which cannot
+        feed a closed window) — requests stay collectable via pump()."""
+        server = SessionServer(tiny_cfg, tiny_params, max_slots=2,
+                               max_len=16, scheduler="frontier",
+                               preempt_rounds=1)
+        reqs = [server.submit(x, max_new=4)
+                for x in _prompts(tiny_cfg, 3, seed=11)]
+        server.pump()  # admit — chains in flight, segments pending
+        server.close()
+        done = server.pump()
+        assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+        assert all(len(r.generated) == 4 for r in done)

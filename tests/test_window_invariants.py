@@ -11,7 +11,7 @@ from repro.core import BufferPool, SchedulingWindow, Task, TaskState
 from repro.core.task import default_segments
 
 
-def make_task(pool, reads, writes, opcode="op"):
+def make_task(pool, reads, writes, opcode="op", priority=1):
     r, w = default_segments(reads, writes)
     return Task(
         opcode=opcode,
@@ -20,6 +20,7 @@ def make_task(pool, reads, writes, opcode="op"):
         outputs=tuple(writes),
         read_segments=r,
         write_segments=w,
+        priority=priority,
     )
 
 
@@ -251,3 +252,107 @@ class TestReadyOrdering:
         w.mark_executing(t1)
         w.retire(t1)  # wakes t2, whose seq is between none-left and t4
         assert [t.tid for t in w.ready_tasks()] == [t2.tid, t4.tid]
+
+
+class TestPriorityOrdering:
+    """DESIGN §13: the READY index keys on (priority bucket, seq, tid) —
+    urgent buckets first, bit-identical program order within a bucket,
+    and priority can never reorder *dependent* work."""
+
+    def test_urgent_fresh_insert_jumps_ahead_of_background_ready(self):
+        pool = BufferPool()
+        bs = bufs(pool, 8)
+        w = SchedulingWindow(size=8)
+        low = [make_task(pool, [bs[2 * i]], [bs[2 * i + 1]], priority=2)
+               for i in range(3)]
+        w.submit_all(low)
+        urgent = make_task(pool, [bs[6]], [bs[7]], priority=0)
+        w.submit(urgent)  # arrives LAST, must list FIRST
+        assert [t.tid for t in w.ready_tasks()] == \
+            [urgent.tid] + [t.tid for t in low]
+        assert w._ready == sorted(w._ready)
+
+    def test_program_order_preserved_within_a_bucket(self):
+        pool = BufferPool()
+        bs = bufs(pool, 12)
+        w = SchedulingWindow(size=16)
+        tasks = [make_task(pool, [bs[2 * i]], [bs[2 * i + 1]],
+                           priority=(0 if i % 2 else 2))
+                 for i in range(6)]
+        w.submit_all(tasks)
+        got = [t.tid for t in w.ready_tasks()]
+        want = ([t.tid for t in tasks if t.priority == 0]
+                + [t.tid for t in tasks if t.priority == 2])
+        assert got == want
+
+    def test_woken_dependent_bisects_into_its_bucket(self):
+        pool = BufferPool()
+        a, b, c, d, e, f, g = bufs(pool, 7)
+        w = SchedulingWindow(size=8)
+        t1 = make_task(pool, [a], [b], priority=2)
+        t2 = make_task(pool, [b], [c], priority=0)  # urgent, waits on t1
+        t3 = make_task(pool, [d], [e], priority=0)  # urgent, READY
+        t4 = make_task(pool, [f], [g], priority=2)  # background, READY
+        w.submit_all([t1, t2, t3, t4])
+        assert [t.tid for t in w.ready_tasks()] == [t3.tid, t1.tid, t4.tid]
+        w.mark_executing(t1)
+        w.retire(t1)
+        # t2 wakes into bucket 0 — its seq (1) is older than t3's (2), so
+        # it bisects AHEAD of t3 within the urgent bucket, and the whole
+        # bucket stays ahead of background t4
+        assert [t.tid for t in w.ready_tasks()] == [t2.tid, t3.tid, t4.tid]
+        assert w._ready == sorted(w._ready)
+
+    def test_priority_never_reorders_dependent_chain(self):
+        """An urgent task RAW-dependent on background work stays PENDING:
+        priority jumps the READY queue, never the dependency graph."""
+        pool = BufferPool()
+        a, b, c = bufs(pool, 3)
+        w = SchedulingWindow(size=4)
+        lo = make_task(pool, [a], [b], priority=2)
+        hi = make_task(pool, [b], [c], priority=0)  # reads lo's write
+        w.submit_all([lo, hi])
+        assert [t.tid for t in w.ready_tasks()] == [lo.tid]
+
+    @given(st.integers(0, 10_000), st.integers(1, 9))
+    @settings(max_examples=25, deadline=None)
+    def test_property_bucket_order_and_in_bucket_program_order(self, seed,
+                                                              size):
+        import random as pyrandom
+
+        rng = np.random.RandomState(seed)
+        tasks = random_stream(seed, 30, 4)
+        for t in tasks:
+            t.priority = int(rng.randint(0, 3))
+        pos = {t.tid: i for i, t in enumerate(tasks)}
+        prio = {t.tid: t.priority for t in tasks}
+        w = SchedulingWindow(size=size)
+        w.submit_all(tasks)
+        pyr = pyrandom.Random(seed)
+        while not w.drained():
+            ready = w.ready_tasks()
+            assert ready, "stall"
+            keys = [(prio[t.tid], pos[t.tid]) for t in ready]
+            assert keys == sorted(keys), "ready not bucket-then-program order"
+            assert w._ready == sorted(w._ready)
+            t = ready[pyr.randrange(len(ready))]
+            w.mark_executing(t)
+            w.retire(t)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_single_class_index_identical_to_seq_order(self, seed):
+        """With one priority class (the default), the bucketed index must
+        be bit-identical to the old (seq, tid) index: same ready order at
+        every step as sorting by program position alone."""
+        tasks = random_stream(seed, 24, 4)
+        pos = {t.tid: i for i, t in enumerate(tasks)}
+        w = SchedulingWindow(size=6)
+        w.submit_all(tasks)
+        while not w.drained():
+            ready = w.ready_tasks()
+            positions = [pos[t.tid] for t in ready]
+            assert positions == sorted(positions)
+            t = ready[0]
+            w.mark_executing(t)
+            w.retire(t)
