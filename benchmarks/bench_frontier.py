@@ -106,10 +106,16 @@ def compare(name: str, build, warm_seeds=(0,), fresh_seeds=(10, 11, 12, 13)) -> 
     syncs = post["blocking_syncs"] - pre["blocking_syncs"]
     emit(name, "frontier_dispatches", dispatches)
     emit(name, "frontier_blocking_syncs", syncs)
-    emit(name, "frontier_max_inflight_groups",
-         last_report["frontier"].max_inflight_groups())
+    max_groups = last_report["frontier"].max_inflight_groups()
+    emit(name, "frontier_max_inflight_groups", max_groups)
     best = min(irr_times["wave"], irr_times["threaded"])
     emit(name, "frontier_vs_best_barrier", round(best / irr_times["frontier"], 3))
+    # Structural gates (no timing): the §II-D sync-overhead claim — the
+    # frontier must dispatch far more than it blocks — and the barrier
+    # really being gone (more than one group in flight at once).
+    emit(name, "frontier_fewer_syncs_than_dispatches",
+         int(syncs * 4 <= dispatches))
+    emit(name, "frontier_overlap_used", int(max_groups > 1))
 
     # -- recurring leg: warm-shape re-runs (wave fusion's best case) ------
     rec_times = {
@@ -125,12 +131,16 @@ def device_plan_density(name: str, tasks) -> None:
     window = opt("window", 32)
     wave_plan = plan_waves(tasks, window)
     frontier_plan = plan_frontier(tasks, window)
-    emit(name, "wave_plan_active_fraction",
-         round(plan_active_fraction(wave_plan), 3))
-    emit(name, "frontier_plan_active_fraction",
-         round(plan_active_fraction(frontier_plan), 3))
+    wave_frac = plan_active_fraction(wave_plan)
+    frontier_frac = plan_active_fraction(frontier_plan)
+    emit(name, "wave_plan_active_fraction", round(wave_frac, 3))
+    emit(name, "frontier_plan_active_fraction", round(frontier_frac, 3))
     emit(name, "wave_plan_steps", len(wave_plan))
     emit(name, "frontier_plan_steps", len(frontier_plan))
+    # Structural gate: frontier plans pack at least as densely as waves on
+    # the same stream (plan-shape property, independent of host timing).
+    emit(name, "frontier_density_beats_wave",
+         int(frontier_frac >= wave_frac))
 
 
 def main() -> None:

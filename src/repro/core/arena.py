@@ -141,28 +141,35 @@ class ShardTransferTable:
     space: ``(class_id, row)`` coordinates are meaningful only against the
     owning shard's slabs, so a buffer consumed on a different shard than
     the one that produced it cannot be addressed remotely; its row is
-    STAGED across at an epoch boundary (owner syncs the row to host, the
-    destination refreshes it on its next dispatch). This table records
-    every such staged copy — source shard, destination shard, shape-class
-    label, row bytes — so the mesh session can report cross-device traffic
-    honestly (the paper's concurrency claims are only meaningful net of
-    transfer cost).
+    MOVED across at a sub-epoch boundary — either as a direct
+    device-to-device peer copy of the slab row (``mode="d2d"``) or through
+    the host-staged fallback (owner syncs the row to host, the destination
+    refreshes it on its next dispatch; ``mode="staged"``). This table
+    records every such copy — source shard, destination shard, shape-class
+    label, row bytes, and transfer mode — so the mesh session can report
+    cross-device traffic honestly (the paper's concurrency claims are only
+    meaningful net of transfer cost).
     """
 
     def __init__(self) -> None:
         self.transfers = 0
         self.bytes = 0
-        # (src_shard, dst_shard) -> count; class label -> count.
+        # (src_shard, dst_shard) -> count; class label -> count;
+        # mode -> {transfers, bytes} (the d2d-vs-staged audit split).
         self.by_route: Dict[Tuple[int, int], int] = {}
         self.by_class: Dict[str, int] = {}
+        self.by_mode: Dict[str, Dict[str, int]] = {}
 
     def record(self, src_shard: int, dst_shard: int, class_label: str,
-               nbytes: int) -> None:
+               nbytes: int, mode: str = "staged") -> None:
         self.transfers += 1
         self.bytes += int(nbytes)
         route = (src_shard, dst_shard)
         self.by_route[route] = self.by_route.get(route, 0) + 1
         self.by_class[class_label] = self.by_class.get(class_label, 0) + 1
+        slot = self.by_mode.setdefault(mode, {"transfers": 0, "bytes": 0})
+        slot["transfers"] += 1
+        slot["bytes"] += int(nbytes)
 
     def as_dict(self) -> Dict[str, Any]:
         return {
@@ -171,6 +178,8 @@ class ShardTransferTable:
             "by_route": {f"{s}->{d}": n
                          for (s, d), n in sorted(self.by_route.items())},
             "by_class": dict(sorted(self.by_class.items())),
+            "by_mode": {m: dict(v)
+                        for m, v in sorted(self.by_mode.items())},
         }
 
 
@@ -296,6 +305,70 @@ class SlabArena:
     def __contains__(self, buf: Buffer) -> bool:
         """True iff ``buf`` already holds a (class, row) assignment."""
         return id(buf) in self._addr
+
+    def addr_of(self, buf: Buffer) -> Optional[Tuple[int, int]]:
+        """``(class_id, row)`` for a resident buffer, ``None`` otherwise —
+        the read-only lookup transfer layers use (unlike :meth:`add`, it
+        never assigns a row as a side effect)."""
+        return self._addr.get(id(buf))
+
+    # -- row-granular device transfer (mesh d2d edges) ----------------------
+    def export_row(self, slabs: Sequence[Any], buf: Buffer, *,
+                   expected_generation: Optional[int] = None) -> Any:
+        """The materialized device row holding ``buf``'s padded value —
+        the unit a :class:`ShardLink` peer-copies to another shard without
+        a host round-trip. Raises if the buffer is not resident, its row
+        was never packed, or the class generation moved under the caller
+        (a compaction renumbered rows between address capture and export)."""
+        addr = self._addr.get(id(buf))
+        if addr is None:
+            raise KeyError(f"export_row: {buf.name!r} is not arena-resident")
+        cid, row = addr
+        if expected_generation is not None and \
+                self._generation[cid] != expected_generation:
+            raise RuntimeError(
+                f"export_row: class {cid} generation moved "
+                f"{expected_generation} -> {self._generation[cid]} "
+                f"(compaction invalidated the captured row address)")
+        if row >= self._packed_rows[cid] or row in self._reused[cid]:
+            raise RuntimeError(
+                f"export_row: {buf.name!r} row {row} is not materialized "
+                "device-side (unpacked or pending host refresh)")
+        return slabs[cid][row]
+
+    def import_row(self, slabs: Sequence[Any], buf: Buffer, value: Any, *,
+                   expected_generation: Optional[int] = None) -> List[Any]:
+        """Functionally set ``buf``'s slab row to ``value`` (a padded row
+        exported from a peer shard), committing the value onto this slab's
+        device — the receiving half of a d2d edge. Requires the row to be
+        materialized already (inside the packed watermark); the same
+        generation check as :meth:`export_row` applies."""
+        addr = self._addr.get(id(buf))
+        if addr is None:
+            raise KeyError(f"import_row: {buf.name!r} is not arena-resident")
+        cid, row = addr
+        if expected_generation is not None and \
+                self._generation[cid] != expected_generation:
+            raise RuntimeError(
+                f"import_row: class {cid} generation moved "
+                f"{expected_generation} -> {self._generation[cid]} "
+                f"(compaction invalidated the captured row address)")
+        if row >= self._packed_rows[cid]:
+            raise RuntimeError(
+                f"import_row: {buf.name!r} row {row} is not materialized "
+                "device-side yet (pack before importing)")
+        cls = self._classes[cid]
+        if tuple(value.shape) != cls.padded_shape:
+            raise ValueError(
+                f"import_row: {buf.name!r} expects a padded row of shape "
+                f"{cls.padded_shape}, got {tuple(value.shape)}")
+        out = list(slabs)
+        out[cid] = out[cid].at[row].set(
+            _commit_like(value.astype(out[cid].dtype), out[cid]))
+        # The device row now holds the peer's bits; a pending host-refresh
+        # mark would clobber them at the next pack.
+        self._reused[cid].discard(row)
+        return out
 
     @property
     def classes(self) -> List[ShapeClass]:
@@ -448,6 +521,20 @@ class SlabArena:
         return out, moved
 
     # -- host <-> device movement ------------------------------------------
+    @staticmethod
+    def _place(val: Any, device: Optional[Any]) -> Any:
+        """Commit a row value onto ``device`` before it is stacked with
+        sibling rows. Host values are not guaranteed co-located: after a
+        cross-shard unpack, ``buf.value`` is a slice of the OWNING shard's
+        slab, committed to that shard's device — stacking two such rows
+        from different shards raises jax's incompatible-devices error
+        unless the consumer pins them onto its own device first."""
+        if device is None:
+            return val
+        import jax
+
+        return jax.device_put(val, device)
+
     def _row_value(self, buf: Optional[Buffer], cls: ShapeClass):
         if buf is None:
             # Dead row (freed, not yet recycled/compacted): placeholder.
@@ -471,14 +558,16 @@ class SlabArena:
         pads = [(0, p - s) for s, p in zip(val.shape, cls.padded_shape)]
         return jnp.pad(val, pads)
 
-    def pack(self) -> List[Any]:
+    def pack(self, device: Optional[Any] = None) -> List[Any]:
         """One device array per class: ``[rows, *padded_shape]``. Every
         row is addressable by some operand — no scratch row (all lowered
-        steps are fully active)."""
+        steps are fully active). ``device`` pins each row value before
+        stacking (see :meth:`_place`)."""
         slabs = []
         for cid, cls in enumerate(self._classes):
             dtype = np.dtype(cls.dtype)
-            rows = [self._row_value(b, cls) for b in self._rows[cid]]
+            rows = [self._place(self._row_value(b, cls), device)
+                    for b in self._rows[cid]]
             slab = jnp.stack(rows).astype(dtype)
             cap = row_capacity(len(rows))
             if cap > len(rows):
@@ -490,15 +579,17 @@ class SlabArena:
             self._reused[cid].clear()  # every row just re-read from host
         return slabs
 
-    def pack_incremental(self, slabs: Optional[Sequence[Any]]) -> List[Any]:
+    def pack_incremental(self, slabs: Optional[Sequence[Any]],
+                         device: Optional[Any] = None) -> List[Any]:
         """Persistent-arena pack: keep already-materialized slab rows (they
         hold the latest device-side values) and append only rows added
         since the last pack. ``slabs=None`` degenerates to a full
         :meth:`pack`. New classes get fresh slabs; existing slabs are never
         re-read from host values — host-side changes to already-packed
-        buffers go through :meth:`update_rows`."""
+        buffers go through :meth:`update_rows`. ``device`` pins appended
+        and refreshed row values before stacking (see :meth:`_place`)."""
         if slabs is None:
-            return self.pack()
+            return self.pack(device=device)
         out: List[Any] = list(slabs)
         for cid, cls in enumerate(self._classes):
             dtype = np.dtype(cls.dtype)
@@ -506,7 +597,8 @@ class SlabArena:
             packed = self._packed_rows[cid] if cid < len(slabs) else 0
             if packed < total:
                 fresh = jnp.stack(
-                    [self._row_value(b, cls) for b in self._rows[cid][packed:]]
+                    [self._place(self._row_value(b, cls), device)
+                     for b in self._rows[cid][packed:]]
                 ).astype(dtype)
                 if cid < len(out):
                     cap = out[cid].shape[0]
@@ -528,7 +620,8 @@ class SlabArena:
                 # the dead occupant's bits — refresh from host values.
                 rows = sorted(self._reused[cid])
                 vals = jnp.stack(
-                    [self._row_value(self._rows[cid][r], cls) for r in rows]
+                    [self._place(self._row_value(self._rows[cid][r], cls),
+                                 device) for r in rows]
                 ).astype(dtype)
                 out[cid] = out[cid].at[jnp.asarray(rows, dtype=jnp.int32)].set(
                     _commit_like(vals, out[cid]))

@@ -1218,6 +1218,17 @@ def _device_lowerable(task: Task) -> bool:
     return True
 
 
+def _array_ready(arr: Any) -> bool:
+    """Non-blocking completion probe for an async-dispatched jax array
+    (True = the producing computation landed). Arrays without the probe
+    (older jax, plain numpy from a host fallback) count as ready — the
+    blocking retire path still guarantees correctness."""
+    try:
+        return bool(arr.is_ready())
+    except AttributeError:
+        return True
+
+
 class DeviceSession(SchedulerSession):
     """Persistent device-resident window: the rolling, live-fed ACS-HW
     analogue (DESIGN §2 A3).
@@ -1320,6 +1331,9 @@ class DeviceSession(SchedulerSession):
         # (slab newer than host) / host-side (host newer than slab).
         self._device_dirty: Dict[int, Buffer] = {}
         self._host_dirty: Dict[int, Buffer] = {}
+        # id(Buffer) -> stream tag to attribute the pending h2d refresh to
+        # (mesh staged edges tag their destination half "mesh-transfer").
+        self._host_dirty_tags: Dict[int, str] = {}
         # structure key (plan signatures x arena addresses) -> lowered
         # (run_fn, tables, n_steps, class_gens): the session-scope plan
         # cache. Entries carry the arena generation of every class they
@@ -1355,6 +1369,18 @@ class DeviceSession(SchedulerSession):
         self.host_syncs_d2h = 0
         self.host_syncs_h2d = 0
         self.host_syncs_by_tag: Dict[str, int] = {}
+        # Mesh d2d edge accounting: rows peer-copied out of / into this
+        # session's slabs without a host round-trip, and device-dirty
+        # claims dropped because another shard took write ownership.
+        self.d2d_row_exports = 0
+        self.d2d_row_imports = 0
+        self.row_invalidations = 0
+        # Overlapped-drain surface (mesh): launch() dispatches epochs with
+        # retirement DEFERRED — each device segment parks here with its
+        # output slabs as completion probes until poll_inflight() retires
+        # it (FIFO, preserving program-order retirement).
+        self._inflight: deque = deque()
+        self._defer_retire = False
         self.epoch_log: Any = ([] if history_limit is None
                                else deque(maxlen=history_limit))
 
@@ -1440,16 +1466,90 @@ class DeviceSession(SchedulerSession):
         with self._lock:
             self._sync_to_host(list(buffers), tags=tuple(tags))
 
-    def mark_host_dirty(self, buf: Buffer) -> None:
+    def mark_host_dirty(self, buf: Buffer, tag: Optional[str] = None) -> None:
         """Tell this session the buffer's HOST value is now authoritative
         (another shard produced it, or the producer rewrote it between
         epochs): drop any stale device-dirty claim and schedule a row
         refresh at the next dispatch. No-op for buffers this session's
-        arena has never packed — their next pack reads host values anyway."""
+        arena has never packed — their next pack reads host values anyway.
+        ``tag`` attributes the eventual h2d refresh to the stream that
+        forced it (the mesh staged path passes ``"mesh-transfer"`` so both
+        halves of a staged edge land in the per-tag sync audit)."""
         with self._lock:
             self._device_dirty.pop(id(buf), None)
             if buf in self.arena:
                 self._host_dirty[id(buf)] = buf
+                if tag is not None:
+                    self._host_dirty_tags[id(buf)] = tag
+
+    # -- d2d row transfer (mesh ShardLink halves) ---------------------------
+    def export_row(self, buf: Buffer) -> Optional[Any]:
+        """The device-resident slab row holding ``buf``'s authoritative
+        padded value, for a peer shard to import without a host hop — or
+        ``None`` when this session holds no device-authoritative copy
+        (host value current, row never materialized, or pending a host
+        refresh), in which case the caller must take the host-staged
+        path. The export is a lazy slice: it does NOT block on in-flight
+        dispatches — the receiving ``.at[row].set`` stays async too."""
+        with self._lock:
+            if self._slabs is None or id(buf) not in self._device_dirty:
+                return None
+            addr = self.arena.addr_of(buf)
+            if addr is None:
+                return None
+            cid, _row = addr
+            try:
+                row = self.arena.export_row(
+                    self._slabs, buf,
+                    expected_generation=self.arena.class_generation(cid))
+            except RuntimeError:
+                return None
+            self.d2d_row_exports += 1
+            return row
+
+    def import_row(self, buf: Buffer, value: Any) -> bool:
+        """Receive a peer shard's exported slab row directly into this
+        session's slab (d2d edge): the row becomes device-authoritative
+        here — exactly the state a local dispatch write leaves — so every
+        downstream sync/observer path behaves identically. Returns False
+        (caller falls back to host staging) when this session has no
+        pinned device to commit the peer value onto."""
+        with self._lock:
+            if self.device is None:
+                return False
+            self.arena.add(buf)
+            cid, _row = self.arena.addr_of(buf)
+            # Materialize any not-yet-packed rows first (admission upload,
+            # not a counted sync): a first-touch import needs its row
+            # inside the packed watermark. Then pin, so the functional
+            # .at[].set commits onto this shard's device.
+            self._slabs = self.arena.pack_incremental(self._slabs,
+                                                      device=self.device)
+            self._slabs = [jax.device_put(s, self.device)
+                           for s in self._slabs]
+            self._slabs = self.arena.import_row(
+                self._slabs, buf, value,
+                expected_generation=self.arena.class_generation(cid))
+            self._host_dirty.pop(id(buf), None)
+            self._host_dirty_tags.pop(id(buf), None)
+            self._device_dirty[id(buf)] = buf
+            self.d2d_row_imports += 1
+            return True
+
+    def invalidate_row(self, buf: Buffer) -> bool:
+        """Drop any authoritative claim this session holds on ``buf`` —
+        the write-owner invalidation half of the mesh protocol: when
+        another shard takes write ownership, every superseded copy must
+        stop asserting its (now stale) value, or a later sync here would
+        clobber the fresh one. The slab row keeps its bits; a future read
+        on this shard re-stages through the link first."""
+        with self._lock:
+            had = self._device_dirty.pop(id(buf), None) is not None
+            self._host_dirty.pop(id(buf), None)
+            self._host_dirty_tags.pop(id(buf), None)
+            if had:
+                self.row_invalidations += 1
+            return had
 
     # -- row lifecycle -------------------------------------------------------
     def release_buffer(self, buf: Buffer) -> bool:
@@ -1462,6 +1562,7 @@ class DeviceSession(SchedulerSession):
         with self._lock:
             self._device_dirty.pop(id(buf), None)
             self._host_dirty.pop(id(buf), None)
+            self._host_dirty_tags.pop(id(buf), None)
             return self.arena.free(buf)
 
     def _maybe_compact(self) -> None:
@@ -1571,13 +1672,18 @@ class DeviceSession(SchedulerSession):
         and refresh rows whose host values changed since packing. The
         refresh IS a host->device transition (the opaque-operand fallback
         wrote those buffers host-side), so it counts toward host_syncs."""
-        self._slabs = self.arena.pack_incremental(self._slabs)
+        self._slabs = self.arena.pack_incremental(self._slabs,
+                                                  device=self.device)
         stale = [b for b in self._host_dirty.values() if b in self.arena]
         if stale:
             self._slabs = self.arena.update_rows(self._slabs, stale)
+            tags = set(self._tags_of(tasks))
             for b in stale:
                 del self._host_dirty[id(b)]
-            self._count_sync("h2d", self._tags_of(tasks))
+                forced = self._host_dirty_tags.pop(id(b), None)
+                if forced is not None:
+                    tags.add(forced)
+            self._count_sync("h2d", tuple(tags))
         if self.device is not None:
             # Commit to the pinned device (no-op for rows already there);
             # dispatch then executes on it regardless of JAX's default.
@@ -1727,13 +1833,71 @@ class DeviceSession(SchedulerSession):
 
     # -- the epoch ----------------------------------------------------------
     def _pump(self) -> bool:
+        # Segments a prior launch() left in flight retire first (blocking:
+        # _pump must make progress) — flush/close after a launch drains
+        # cleanly instead of stalling on a window that looks idle.
+        progressed = False
+        if self._inflight:
+            progressed = self._drain_inflight(block=True) > 0
         if self.window.idle():
-            return False
+            return progressed
         if self.plan_mode == "loop":
             self._run_epoch_loop()
         else:
             self._run_epoch()
         return True
+
+    # -- overlapped drain (mesh pump) ---------------------------------------
+    def launch(self) -> bool:
+        """Dispatch everything admitted so far WITHOUT retiring device
+        segments: each device dispatch is enqueued async and parked on the
+        in-flight queue; its retirement — observer sync, callbacks,
+        outstanding accounting — happens at :meth:`poll_inflight`. This is
+        the mesh session's overlapped-drain hook: launching every involved
+        shard back-to-back puts independent shards' epochs in flight
+        concurrently before anyone blocks. Host-fallback tasks still
+        execute and retire inline (their operand syncs block anyway).
+        Returns True when anything is in flight or was dispatched."""
+        with self._lock:
+            if self.window.idle():
+                return bool(self._inflight)
+            self._defer_retire = True
+            try:
+                if self.plan_mode == "loop":
+                    self._run_epoch_loop()
+                else:
+                    self._run_epoch()
+            finally:
+                self._defer_retire = False
+            return True
+
+    @property
+    def inflight_segments(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def poll_inflight(self, block: bool = False) -> int:
+        """Retire in-flight device segments whose dispatches have landed,
+        oldest-first (program-order retirement). Non-blocking by default:
+        stops at the first segment whose output slabs are not ready.
+        ``block=True`` forces the oldest segment to completion first.
+        Returns the number of tasks retired."""
+        with self._lock:
+            return self._drain_inflight(block=block)
+
+    def _drain_inflight(self, block: bool) -> int:
+        retired = 0
+        while self._inflight:
+            dev_plan, probes = self._inflight[0]
+            if not block and not all(_array_ready(p) for p in probes):
+                break
+            if block:
+                jax.block_until_ready(list(probes))
+            self._inflight.popleft()
+            self._retire_device_segment(dev_plan)
+            retired += sum(len(step) for step in dev_plan)
+            block = False  # only force the oldest; the rest must be ready
+        return retired
 
     def _retire_device_segment(self, dev_plan: List[List[Task]]) -> None:
         """Retire a just-dispatched device segment. Retirement observers —
@@ -1741,7 +1905,13 @@ class DeviceSession(SchedulerSession):
         so a watched segment syncs the slabs back first (one blocking sync
         — the retire boundary); observation granularity is the segment,
         since intermediate slab states inside its single dispatch are
-        never materialized."""
+        never materialized. Under a deferred launch the segment parks on
+        the in-flight queue instead, with the dispatch's output slabs as
+        completion probes; poll_inflight re-enters here to finish the
+        job."""
+        if self._defer_retire:
+            self._inflight.append((dev_plan, tuple(self._slabs or ())))
+            return
         watched = bool(self._listeners) or any(
             t.tid in self._watchers or t.tid in self._tickets
             for step in dev_plan for t in step)
@@ -1821,6 +1991,9 @@ class DeviceSession(SchedulerSession):
                 "host_syncs_d2h": self.host_syncs_d2h,
                 "host_syncs_h2d": self.host_syncs_h2d,
                 "host_syncs_by_tag": dict(self.host_syncs_by_tag),
+                "d2d_row_exports": self.d2d_row_exports,
+                "d2d_row_imports": self.d2d_row_imports,
+                "row_invalidations": self.row_invalidations,
                 "n_classes": self.arena.n_classes(),
                 "padding_waste_frac": round(self.arena.total_waste_frac(), 4),
                 # row lifecycle (DESIGN §2 A3 gap (2))

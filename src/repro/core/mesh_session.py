@@ -40,16 +40,33 @@ live window across a JAX device mesh (``launch.mesh.make_window_mesh``):
   disjoint row-views of one buffer must not split row ownership across
   shards), so shards dispatch independently (concurrent streams on real
   multi-device hardware);
-* only true **cross-shard edges** move data, staged at sub-epoch
-  boundaries through the host image: the owning shard syncs the row back
-  (``sync_buffers``, a counted d2h), the consuming shard marks it
-  host-authoritative (``mark_host_dirty``) and re-uploads on its next
-  dispatch (a counted h2d). Every staged copy lands in the
+* only true **cross-shard edges** move data, through a
+  :class:`ShardLink` at sub-epoch boundaries. The link selects a
+  transfer mode per session (``transfer_mode="auto"`` probes the backend
+  once): **d2d** peer-copies the owning shard's slab row straight onto
+  the consumer's slab (``jax.device_put`` between pinned devices — no
+  host hop, the row arrives device-authoritative exactly as if the
+  consumer had written it), while **staged** is the host fallback — the
+  owner syncs the row back (``sync_buffers``, a counted d2h tagged
+  ``mesh-transfer``), the consumer marks it host-authoritative
+  (``mark_host_dirty``) and re-uploads on its next dispatch (a counted
+  h2d, same tag). Rows the owner holds only host-side fall back to
+  staged per-row even in d2d mode. Every copy lands in the
   :class:`~.arena.ShardTransferTable` — source/destination shard, shape
-  class, bytes — so the capacity claims in ``bench_serving`` are honest
-  net of transfer traffic. A per-buffer copy-set memoizes clean replicas:
-  a weight buffer read by many shards ships once per shard, not once per
-  epoch.
+  class, bytes, mode — so the capacity claims in ``bench_serving`` are
+  honest net of transfer traffic. A per-buffer copy-set memoizes clean
+  replicas (a weight buffer read by many shards ships once per shard,
+  not once per epoch), and a write **invalidates** every other copy
+  holder's authoritative claim (``invalidate_row``) so a superseded d2d
+  replica can never clobber the fresh value at a later sync.
+* shard drains **overlap** (``overlap_drains=True``): a sub-epoch
+  launches every involved shard's epoch back-to-back with retirement
+  deferred (``DeviceSession.launch``), then retires them through a
+  non-blocking round-robin ``poll_inflight`` pump — independent shards'
+  dispatches are genuinely concurrent on multi-device hardware instead
+  of serialized by a host-side drain loop. ``drain_overlap`` records the
+  max shards simultaneously in flight; a stall raises only when a full
+  round-robin pass (plus one blocking poll) advances nothing.
 
 Placement is the CAPACITY mechanism, not just a traffic optimization: a
 single interleaved window keeps re-tracing (spec subsets × shape
@@ -81,7 +98,104 @@ from .scoreboard import IntervalScoreboard
 from .session import SchedulerSession
 from .task import Task, operand_base
 
-__all__ = ["MeshDeviceSession"]
+__all__ = ["MeshDeviceSession", "ShardLink"]
+
+
+class ShardLink:
+    """Cross-shard row mover: the transfer layer between a mesh session's
+    per-device shards (DESIGN §12).
+
+    One link per session. ``mode`` selects the path:
+
+    * ``"d2d"`` — the owner exports its device-resident slab row
+      (:meth:`DeviceSession.export_row`, a lazy slice that never blocks)
+      and the destination imports it (:meth:`DeviceSession.import_row`,
+      a ``jax.device_put`` peer copy committed onto the destination's
+      pinned device) — no host round-trip, no ``host_syncs``;
+    * ``"staged"`` — the original host hop (owner d2h, destination marks
+      host-dirty and re-uploads at its next dispatch), both halves tagged
+      ``mesh-transfer`` in the sync audit;
+    * ``"auto"`` — probe once at construction: a trial peer copy between
+      the first two distinct shard devices selects ``d2d`` if the backend
+      lands it on the target device, ``staged`` otherwise (the fallback
+      matrix for backends without p2p).
+
+    Even under ``d2d``, a row whose authoritative value lives host-side
+    (host-fallback writes, never-dispatched buffers) falls back to the
+    staged path per-row — ``d2d_fallbacks`` counts those. Every move is
+    recorded in the :class:`~.arena.ShardTransferTable` with its actual
+    mode, so the byte audit stays exact on both paths.
+    """
+
+    MODES = ("auto", "d2d", "staged")
+
+    def __init__(self, shards: Sequence[DeviceSession],
+                 table: ShardTransferTable, mode: str = "auto"):
+        if mode not in self.MODES:
+            raise ValueError(
+                f"transfer_mode must be one of {self.MODES}, got {mode!r}")
+        self.shards = list(shards)
+        self.table = table
+        self.requested_mode = mode
+        self.selected_mode = (mode if mode != "auto"
+                              else ("d2d" if self._probe_p2p() else "staged"))
+        self.d2d_moves = 0
+        self.staged_moves = 0
+        self.d2d_fallbacks = 0
+
+    def _probe_p2p(self) -> bool:
+        """One-shot backend capability probe: can a committed array move
+        between two distinct shard devices with ``jax.device_put``? A
+        single-device mesh trivially supports the d2d path (the peer copy
+        degenerates to a same-device put)."""
+        devs: List[Any] = []
+        for sh in self.shards:
+            d = sh.device
+            if d is not None and all(d is not e for e in devs):
+                devs.append(d)
+        if not devs:
+            return False  # no pinned devices: nothing to commit a row onto
+        if len(devs) == 1:
+            return True
+        try:
+            import jax
+            import jax.numpy as jnp
+
+            probe = jax.device_put(jnp.zeros((8,), jnp.float32), devs[0])
+            peer = jax.device_put(probe, devs[1])
+            jax.block_until_ready(peer)
+            (landed,) = peer.devices()
+            return landed == devs[1]
+        except Exception:
+            return False
+
+    def move(self, base: Buffer, owner: int, dest: int) -> str:
+        """Move ``base``'s row from shard ``owner`` to shard ``dest``;
+        returns the mode actually used (``"d2d"`` or ``"staged"``)."""
+        src, dst = self.shards[owner], self.shards[dest]
+        label = src.arena.class_of(base).label
+        nbytes = src.arena.row_nbytes(base)
+        if self.selected_mode == "d2d":
+            row = src.export_row(base)
+            if row is not None and dst.import_row(base, row):
+                self.d2d_moves += 1
+                self.table.record(owner, dest, label, nbytes, mode="d2d")
+                return "d2d"
+            self.d2d_fallbacks += 1
+        src.sync_buffers([base], tags=("mesh-transfer",))
+        dst.mark_host_dirty(base, tag="mesh-transfer")
+        self.staged_moves += 1
+        self.table.record(owner, dest, label, nbytes, mode="staged")
+        return "staged"
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "transfer_mode": self.selected_mode,
+            "transfer_mode_requested": self.requested_mode,
+            "d2d_moves": self.d2d_moves,
+            "staged_moves": self.staged_moves,
+            "d2d_fallbacks": self.d2d_fallbacks,
+        }
 
 
 class MeshDeviceSession(SchedulerSession):
@@ -92,7 +206,12 @@ class MeshDeviceSession(SchedulerSession):
     the device count — shards then share devices round-robin, which keeps
     the whole path testable on a single-device host. ``devices=None``
     derives the device list from the window mesh; pass an explicit list to
-    pin shards yourself. The remaining knobs are forwarded to each
+    pin shards yourself. ``transfer_mode`` selects the cross-shard edge
+    path (:class:`ShardLink`): ``"auto"`` probes for d2d peer copies and
+    falls back to host staging, ``"d2d"``/``"staged"`` force a path (the
+    benchmarks force both sides of the A/B). ``overlap_drains=False``
+    reverts sub-epoch drains to the sequential one-shard-at-a-time loop
+    (the overlap A/B baseline). The remaining knobs are forwarded to each
     per-shard :class:`DeviceSession`.
     """
 
@@ -107,6 +226,8 @@ class MeshDeviceSession(SchedulerSession):
         loop_pallas: Optional[bool] = None,
         plan_cache_limit: Optional[int] = 512,
         pad_payloads: bool = False,
+        transfer_mode: str = "auto",
+        overlap_drains: bool = True,
     ):
         super().__init__(window_size, history_limit=history_limit)
         if devices is None:
@@ -157,6 +278,12 @@ class MeshDeviceSession(SchedulerSession):
         self._placed_by_bucket: List[Dict[int, int]] = [
             {} for _ in range(n_shards)]
         self.transfer_table = ShardTransferTable()
+        self.link = ShardLink(self._shards, self.transfer_table,
+                              mode=transfer_mode)
+        self.overlap_drains = overlap_drains
+        # Max shards simultaneously in flight inside one sub-epoch drain —
+        # the structural proof the overlapped pump actually overlaps.
+        self.drain_overlap = 0
         self.cross_shard_edges = 0
         self.sub_epoch_barriers = 0
         self.epochs = 0
@@ -229,10 +356,13 @@ class MeshDeviceSession(SchedulerSession):
     # -- cross-shard staging ----------------------------------------------
     def _stage_transfers(self, task: Task, shard: int) -> None:
         """Materialize the cross-shard edges of one task before its shard
-        dispatches: for every operand owned by another shard, the owner
-        syncs the row to the host image (d2h; no-op if already clean) and
-        this shard re-uploads on its next dispatch (h2d). Memoized per
-        (buffer, shard) through the copy set until the next write."""
+        dispatches: every operand owned by another shard moves through the
+        :class:`ShardLink` — a device-to-device row copy when the link
+        selected d2d, the host-staged hop otherwise. Memoized per
+        (buffer, shard) through the copy set until the next write; a write
+        collapses the copy set to the writer and drops every superseded
+        copy's authoritative claim (write-owner invalidation — a stale d2d
+        replica must never win a later sync race against the fresh row)."""
         for op in tuple(task.inputs) + tuple(task.outputs):
             base = operand_base(op)
             bid = id(base)
@@ -240,16 +370,14 @@ class MeshDeviceSession(SchedulerSession):
             if owner is not None and owner != shard:
                 self.cross_shard_edges += 1
                 if shard not in self._copies.get(bid, ()):
-                    self._shards[owner].sync_buffers(
-                        [base], tags=("mesh-transfer",))
-                    self._shards[shard].mark_host_dirty(base)
-                    self.transfer_table.record(
-                        owner, shard,
-                        self._shards[owner].arena.class_of(base).label,
-                        self._shards[owner].arena.row_nbytes(base))
+                    self.link.move(base, owner, shard)
                     self._copies.setdefault(bid, {owner}).add(shard)
         for op in task.outputs:
-            bid = id(operand_base(op))
+            base = operand_base(op)
+            bid = id(base)
+            for s in self._copies.get(bid, ()):
+                if s != shard:
+                    self._shards[s].invalidate_row(base)
             self._owner[bid] = shard
             self._copies[bid] = {shard}
 
@@ -281,6 +409,17 @@ class MeshDeviceSession(SchedulerSession):
             else:
                 self._shards[shard].submit(task)
         self.waves.append([t.tid for t, _ in sub])
+        if self.overlap_drains:
+            self._drain_overlapped(involved)
+        else:
+            self._drain_sequential(involved)
+        if not watched:
+            for task, _ in sub:
+                self._note_retired(task)
+
+    def _drain_sequential(self, involved: List[int]) -> None:
+        """The pre-overlap baseline: block each involved shard to empty in
+        turn (kept as the A/B control for the overlapped pump)."""
         for shard in involved:
             sh = self._shards[shard]
             while sh.outstanding:
@@ -290,9 +429,45 @@ class MeshDeviceSession(SchedulerSession):
                     raise RuntimeError(
                         f"mesh shard {shard} stalled with "
                         f"{sh.outstanding} tasks outstanding")
-        if not watched:
-            for task, _ in sub:
-                self._note_retired(task)
+
+    def _drain_overlapped(self, involved: List[int]) -> None:
+        """Launch-all-then-poll-round-robin: every involved shard's epoch
+        is dispatched back-to-back with retirement deferred
+        (:meth:`DeviceSession.launch`), so independent shards' dispatches
+        are in flight concurrently; a non-blocking ``poll_inflight``
+        round-robin then retires segments as they land. A shard idle in
+        one round is NOT a stall while others advance: only when a full
+        pass progresses nothing does the pump block on the oldest pending
+        shard, and only a fruitless blocking poll raises — with every
+        pending shard's outstanding count in the error."""
+        for shard in involved:
+            self._shards[shard].launch()
+        pending = [s for s in involved if self._shards[s].outstanding]
+        self.drain_overlap = max(self.drain_overlap, len(pending))
+        while pending:
+            progressed = False
+            for s in list(pending):
+                sh = self._shards[s]
+                if sh.poll_inflight(block=False) > 0:
+                    progressed = True
+                if sh.outstanding and not sh.inflight_segments:
+                    # Backlog past the shard window: dispatch the next
+                    # epoch (still deferred) instead of spinning on it.
+                    progressed = sh.launch() or progressed
+                if not sh.outstanding:
+                    pending.remove(s)
+                    progressed = True
+            if pending and not progressed:
+                sh = self._shards[pending[0]]
+                if sh.poll_inflight(block=True) == 0:
+                    counts = {s: self._shards[s].outstanding
+                              for s in pending}
+                    raise RuntimeError(
+                        "mesh drain stalled: a full round-robin pass "
+                        "advanced no shard; outstanding per shard: "
+                        f"{counts}")
+                if not sh.outstanding:
+                    pending.pop(0)
 
     def _pump(self) -> bool:
         if self.window.idle():
@@ -337,10 +512,20 @@ class MeshDeviceSession(SchedulerSession):
 
     # -- retirement observation --------------------------------------------
     def _pre_observe_retired(self, task: Task) -> None:
-        # A late observer of an already-retired task: bring every shard's
-        # image current before it reads host values.
-        for sh in self._shards:
-            sh.sync()
+        # A late observer of an already-retired task reads the task's
+        # operand values host-side: sync exactly those buffers on the
+        # shards that OWN them (the owner's claim is the authoritative
+        # value; non-owner copies hold the same bits), not a wholesale
+        # O(shards) full-session sweep per observer.
+        per_shard: Dict[int, List[Buffer]] = {}
+        for op in tuple(task.inputs) + tuple(task.outputs):
+            base = operand_base(op)
+            owner = self._owner.get(id(base))
+            if owner is not None:
+                per_shard.setdefault(owner, []).append(base)
+        for shard, bufs in per_shard.items():
+            self._shards[shard].sync_buffers(
+                bufs, tags=DeviceSession._tags_of([task]))
 
     def shard_of(self, buf: Buffer) -> Optional[int]:
         """The shard currently owning (last to write) ``buf``, or None if
@@ -395,6 +580,12 @@ class MeshDeviceSession(SchedulerSession):
                 "cross_shard_edges": self.cross_shard_edges,
                 "placements": dict(self.placements),
                 "transfers": self.transfer_table.as_dict(),
+                **self.link.stats(),
+                "overlap_drains": self.overlap_drains,
+                "drain_overlap": self.drain_overlap,
+                "d2d_row_exports": total("d2d_row_exports"),
+                "d2d_row_imports": total("d2d_row_imports"),
+                "row_invalidations": total("row_invalidations"),
                 "device_dispatches": total("device_dispatches"),
                 "loop_dispatches": total("loop_dispatches"),
                 "host_task_dispatches": total("host_task_dispatches"),

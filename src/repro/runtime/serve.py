@@ -567,7 +567,9 @@ class SessionServer(_ServingCore):
                  tenant_weights: Optional[Dict[str, float]] = None,
                  tenant_quota: Optional[Union[int, Dict[str, int]]] = None,
                  aging_s: Optional[float] = 5.0,
-                 preempt_rounds: Optional[int] = None):
+                 preempt_rounds: Optional[int] = None,
+                 transfer_mode: str = "auto",
+                 overlap_drains: bool = True):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
                          max_queue=max_queue, history_limit=history_limit,
                          tenant_weights=tenant_weights,
@@ -605,7 +607,9 @@ class SessionServer(_ServingCore):
 
             self.session = MeshDeviceSession(window_size=window,
                                              n_shards=n_shards,
-                                             history_limit=history_limit)
+                                             history_limit=history_limit,
+                                             transfer_mode=transfer_mode,
+                                             overlap_drains=overlap_drains)
             # Same row-lifecycle wiring as "device", fanned out to every
             # shard's arena (a freed buffer may hold rows on several).
             self.pool.add_free_hook(self.session.release_buffer)
@@ -872,5 +876,14 @@ class SessionServer(_ServingCore):
                     shards.setdefault(shard, []).append(n)
             entry["shard_slots_mean"] = {
                 str(shard): float(np.mean(v)) for shard, v in sorted(shards.items())}
+        if self.scheduler_name == "mesh":
+            # Transfer-plane summary at top level (the full per-shard audit
+            # stays under device_session): which link mode the session
+            # selected, how traffic split d2d vs staged, and the max
+            # concurrent in-flight shards the overlapped drain reached.
+            stats = self.session.session_stats()
+            for key in ("transfer_mode", "d2d_moves", "staged_moves",
+                        "d2d_fallbacks", "drain_overlap", "overlap_drains"):
+                entry[key] = stats[key]
         self.report_log.append(entry)
         return report

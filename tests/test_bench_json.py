@@ -254,12 +254,62 @@ def test_committed_bench_depcheck_json():
     _assert_depcheck_gates(payload)
 
 
+# Structural gates the committed frontier artifact must hold (1 = pass):
+# no timing gates — speedups are host-load-dependent — only the plan-shape
+# and overlap-structure claims: syncs << dispatches (§II-D), more than one
+# group genuinely in flight, and frontier plans at least as dense as waves.
+FRONTIER_COMPARE_GATES = ("frontier_fewer_syncs_than_dispatches",
+                          "frontier_overlap_used")
+
+
+def _assert_frontier_gates(payload):
+    metrics = {(r["section"], r["metric"]): r["value"]
+               for r in payload["results"]}
+    for section in ("frontier_sim_cheetah", "frontier_dyn_dynamic_routing"):
+        for gate in FRONTIER_COMPARE_GATES:
+            assert metrics.get((section, gate)) == 1, (
+                f"frontier gate {section},{gate} failed: "
+                f"{ {m: v for (s, m), v in metrics.items() if s == section} }")
+        # the evidence behind the verdicts
+        assert metrics[(section, "frontier_blocking_syncs")] * 4 <= \
+            metrics[(section, "frontier_dispatches")]
+        assert metrics[(section, "frontier_max_inflight_groups")] > 1
+        assert (section, "frontier_vs_best_barrier") in metrics
+    assert metrics.get(
+        ("frontier_sim_cheetah", "frontier_density_beats_wave")) == 1
+    assert ("frontier_sim_cheetah", "frontier_plan_active_fraction") in metrics
+    assert ("frontier_sim_cheetah", "wave_plan_active_fraction") in metrics
+
+
+def test_committed_bench_frontier_json():
+    """The repo-root BENCH_frontier.json (regenerated by the CI bench-smoke
+    step) must stay schema-valid with the sync-overhead and plan-density
+    gates green."""
+    path = os.path.join(REPO_ROOT, "BENCH_frontier.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    _validate_schema(payload, expect_sections=["frontier"])
+    assert payload["sections"] == ["frontier"]
+    assert payload["flags"].get("smoke") == "1"
+    _assert_frontier_gates(payload)
+
+
 # Structural gates the committed serving artifact must hold: the live
 # session beats continuous batching on p95, and the mesh-sharded window
 # leg (DESIGN §12) sustains >=2.5x single-window capacity at equal-or-
 # better tail latency, with the win attributable to retrace elimination.
+# The d2d and overlap gates pin the transfer layer: the device-to-device
+# path bit-identical to serial/staged with zero mesh-transfer host syncs
+# and a mode-invariant byte audit, and the overlapped drain pump at
+# sequential-or-better capacity while genuinely overlapping shards.
 MESH_GATES = ("mesh_n4_beats_single_2p5x", "mesh_n4_p95_within_single",
-              "mesh_n4_fewer_compiles")
+              "mesh_n4_fewer_compiles",
+              "mesh_d2d_matches_serial", "mesh_d2d_matches_staged",
+              "mesh_d2d_transfer_host_syncs_O1",
+              "mesh_d2d_bytes_matches_staged",
+              "mesh_overlap_capacity_within_sequential",
+              "mesh_overlap_p95_within_sequential",
+              "mesh_overlap_drains_used")
 
 
 def _assert_serving_gates(payload):
@@ -281,6 +331,18 @@ def _assert_serving_gates(payload):
     for i in range(4):
         assert ("mesh_scaling", f"shard{i}_host_syncs") in metrics
         assert ("mesh_scaling", f"shard{i}_compiled_programs") in metrics
+    # the transfer-layer evidence: the serving leg's link must have
+    # selected d2d on forced host devices, the overlapped pump must have
+    # had >1 shard in flight, and the d2d differential must carry its
+    # host-sync and byte columns (the staged control shows the nonzero
+    # sync count d2d eliminates)
+    assert metrics[("mesh_scaling", "transfer_mode")] == "d2d"
+    assert metrics[("mesh_scaling", "drain_overlap")] > 1
+    assert metrics[("mesh_scaling", "d2d_mesh_transfer_host_syncs")] == 0
+    assert metrics[("mesh_scaling", "staged_mesh_transfer_host_syncs")] > 0
+    assert metrics[("mesh_scaling", "d2d_transfer_bytes")] == \
+        metrics[("mesh_scaling", "staged_transfer_bytes")] > 0
+    assert metrics[("mesh_scaling", "d2d_moves")] > 0
 
 
 def test_committed_bench_serving_json():

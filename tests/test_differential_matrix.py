@@ -515,21 +515,80 @@ def build(seed):
         tasks.append(k.launch(stream, inputs=ins, outputs=outs))
     return bufs, tasks
 
+def chains(seed):
+    # N independent 2-buffer chains + neighbour joins: guarantees
+    # cross-shard edges once placement spreads the chains out.
+    rng = np.random.RandomState(seed)
+    pool = BufferPool()
+    ch = [[pool.alloc((D,), np.float32,
+                      value=jnp.asarray(rng.randn(D).astype(np.float32)))
+           for _ in range(2)] for _ in range({n_dev})]
+    kern = {{"axpy": AcsKernel(name="axpy_fd", fn=LOOP_BRANCHES["axpy"]),
+             "mul": AcsKernel(name="mul_fd", fn=LOOP_BRANCHES["mul"])}}
+    stream = TaskStream()
+    tasks = []
+    for r in range(6):
+        for c in range({n_dev}):
+            a, b = ch[c]
+            tasks.append(kern["axpy"].launch(stream, inputs=(a, b),
+                                             outputs=(a,)))
+            tasks.append(kern["mul"].launch(stream, inputs=(a, b),
+                                            outputs=(b,)))
+        if r % 2 == 1:
+            for c in range({n_dev}):
+                other = ch[(c + 1) % {n_dev}][0]
+                a = ch[c][0]
+                tasks.append(kern["axpy"].launch(stream, inputs=(other, a),
+                                                 outputs=(a,)))
+    return [b for pair in ch for b in pair], tasks
+
+def run_mesh(build_fn, seed, **kw):
+    bufs, tasks = build_fn(seed)
+    sess = MeshDeviceSession(window_size=16, n_shards={n_dev}, **kw)
+    sess.submit(tasks)
+    sess.close()
+    return (np.stack([np.asarray(b.value) for b in bufs]),
+            sess.session_stats())
+
+def mesh_transfer_syncs(stats):
+    return sum(s.get("host_syncs_by_tag", {{}}).get("mesh-transfer", 0)
+               for s in stats["per_shard"])
+
 bufs, tasks = build(3)
 run_serial(tasks)
 ref = np.stack([np.asarray(b.value) for b in bufs])
 
-bufs, tasks = build(3)
-sess = MeshDeviceSession(window_size=16, n_shards={n_dev})
-sess.submit(tasks)
-sess.close()
-got = np.stack([np.asarray(b.value) for b in bufs])
+got, stats = run_mesh(build, 3)
 np.testing.assert_array_equal(got, ref)
-stats = sess.session_stats()
 assert stats["n_devices"] == {n_dev}, stats["n_devices"]
 assert stats["n_shards"] == {n_dev}
+
+# d2d differential on REAL separate devices: the chain stream forces
+# cross-shard edges; forced d2d must stay bit-identical to serial and
+# forced staged while moving every edge as a peer copy — zero
+# mesh-transfer host syncs.
+bufs, tasks = chains(7)
+run_serial(tasks)
+chain_ref = np.stack([np.asarray(b.value) for b in bufs])
+staged_got, staged = run_mesh(chains, 7, transfer_mode="staged")
+d2d_got, d2d = run_mesh(chains, 7, transfer_mode="d2d")
+np.testing.assert_array_equal(staged_got, chain_ref)
+np.testing.assert_array_equal(d2d_got, chain_ref)
+assert d2d["transfer_mode"] == "d2d", d2d["transfer_mode"]
+assert d2d["cross_shard_edges"] > 0
+assert d2d["d2d_moves"] > 0 and d2d["staged_moves"] == 0, (
+    d2d["d2d_moves"], d2d["staged_moves"], d2d["d2d_fallbacks"])
+assert mesh_transfer_syncs(d2d) == 0, mesh_transfer_syncs(d2d)
+assert mesh_transfer_syncs(staged) > 0
+assert d2d["transfers"]["bytes"] == staged["transfers"]["bytes"]
+# the auto probe must also discover p2p on forced host devices
+auto_got, auto = run_mesh(chains, 7)
+np.testing.assert_array_equal(auto_got, chain_ref)
+assert auto["transfer_mode"] == "d2d", auto["transfer_mode"]
+assert auto["drain_overlap"] >= 2, auto["drain_overlap"]
+
 print("MESH_FORCED_OK", stats["cross_shard_edges"],
-      stats["sub_epoch_barriers"])
+      stats["sub_epoch_barriers"], d2d["d2d_moves"])
 """
         env = dict(os.environ)
         env["XLA_FLAGS"] = (
